@@ -1,0 +1,97 @@
+"""Shared benchmark harness: datasets, workloads, qps/recall measurement.
+
+Mirrors the paper's §5.1 setup at CPU-tractable scale: five synthetic
+datasets shaped like Table 1 (dims 128..2048), query ranges with fractions
+2^0..2^-9 in fixed and mixed workloads, recall@10, qps measured post-compile
+over batched queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.data.pipeline import vector_dataset
+
+# CPU-scale stand-ins for the paper's five datasets (Table 1)
+BENCH_DATASETS = {
+    # name: (n, dim, attr_kind)
+    "wit-like": (8192, 128, "uniform"),
+    "tripclick-like": (4096, 96, "clustered"),
+    "ytaudio-like": (4096, 64, "uniform"),
+}
+DEFAULT_K = 10
+_CACHE: dict = {}
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    L: np.ndarray
+    R: np.ndarray
+    queries: np.ndarray
+
+
+def build_index(name: str, *, m=16, efc=64, seed=0) -> RangeGraphIndex:
+    key = (name, m, efc, seed)
+    if key not in _CACHE:
+        n, dim, attr_kind = BENCH_DATASETS[name]
+        vectors, attrs, _ = vector_dataset(
+            n, dim, seed=seed, attr_kind=attr_kind
+        )
+        _CACHE[key] = RangeGraphIndex.build(
+            vectors, attrs[:, 0],
+            BuildConfig(m=m, ef_construction=efc),
+        )
+    return _CACHE[key]
+
+
+def make_workload(index: RangeGraphIndex, kind: str, n_queries=128,
+                  seed=1) -> Workload:
+    """kind: 'frac_<i>' (range fraction 2^-i) or 'mixed' (i in 0..9)."""
+    n, dim = index.n, index.dim
+    rng = np.random.default_rng(seed)
+    _, _, qv = vector_dataset(
+        n, dim, seed=seed + 100, queries=n_queries
+    )
+    if kind.startswith("frac_"):
+        i = int(kind.split("_")[1])
+        spans = np.full(n_queries, max(n >> i, 8))
+    else:
+        fr = rng.integers(0, 10, n_queries)
+        spans = np.maximum(n >> fr, 8)
+    L = np.array([rng.integers(0, n - s + 1) for s in spans], np.int32)
+    R = (L + spans - 1).astype(np.int32)
+    return Workload(kind, L, R, qv)
+
+
+def measure(search_fn, wl: Workload, index, *, k=DEFAULT_K, warmup=True):
+    """Returns dict(qps, recall, mean_dists). search_fn(q, L, R, k) -> res."""
+    gt, _ = index.brute_force(wl.queries, wl.L, wl.R, k=k)
+    if warmup:  # compile outside the timed region
+        search_fn(wl.queries[:8], wl.L[:8], wl.R[:8], k)
+    t0 = time.perf_counter()
+    res = search_fn(wl.queries, wl.L, wl.R, k)
+    ids = np.asarray(res.ids)
+    dt = time.perf_counter() - t0
+    return {
+        "qps": len(wl.queries) / dt,
+        "recall": recall(ids, gt),
+        "mean_dists": float(np.mean(np.asarray(res.n_dists))),
+    }
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    """Print the assignment's ``name,us_per_call,derived`` CSV."""
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def artifacts_dir():
+    d = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "artifacts")
+    os.makedirs(d, exist_ok=True)
+    return d

@@ -1,0 +1,93 @@
+"""Render the §Roofline table and §Dry-run summary into EXPERIMENTS.md.
+
+Reads artifacts/dryrun_all.jsonl (+ dryrun_paper.jsonl, + optional
+dryrun_variants.jsonl for §Perf) and replaces the <!-- ROOFLINE_TABLE -->
+marker. Idempotent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "artifacts")
+EXP = os.path.join(os.path.dirname(ART), "EXPERIMENTS.md")
+
+
+def load(name):
+    p = os.path.join(ART, name)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def fmt_cell(r):
+    if r.get("status") == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | "
+                f"{r['reason'][:58]} |")
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR | "
+                f"{r.get('error', '')[:58]} |")
+    if "t_compute" not in r:
+        return None
+    uf = r.get("useful_flop_frac")
+    mb = r.get("microbatches", "")
+    note = f"mb={mb}" if mb and mb != 1 else ""
+    bpd = r.get("bytes_per_device")
+    bpd = f"{bpd / 1e9:.1f}" if bpd else "—"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2e} | "
+        f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | {bpd} | "
+        f"{r['bottleneck']} ({(uf or 0):.2f}) | {note} |"
+    )
+
+
+def main():
+    recs = load("dryrun_all.jsonl") + load("dryrun_paper.jsonl")
+    single = [r for r in recs if r.get("mesh") == "16x16"]
+    multi = [r for r in recs if r.get("mesh") == "2x16x16"]
+
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) |"
+        " GB/dev | bottleneck (useful-FLOP frac) | notes |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in single:
+        row = fmt_cell(r)
+        if row:
+            lines.append(row)
+    n_ok_s = sum(1 for r in single if r.get("status") == "ok")
+    n_skip = sum(1 for r in single if r.get("status") == "skipped")
+    n_err = sum(1 for r in single if r.get("status") == "error")
+    n_ok_m = sum(1 for r in multi if r.get("status") == "ok")
+    lines.append("")
+    lines.append(
+        f"Single-pod 16x16: **{n_ok_s} compiled**, {n_skip} skipped "
+        f"(policy), {n_err} errors. Multi-pod 2x16x16: **{n_ok_m} "
+        f"compiled** (same skip policy). Full records: "
+        f"`artifacts/dryrun_all.jsonl`."
+    )
+    table = "\n".join(lines)
+
+    with open(EXP) as f:
+        doc = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    done = "<!-- ROOFLINE_DONE -->"
+    if marker in doc:
+        doc = doc.replace(marker, table + "\n" + done)
+    elif done in doc:  # re-render: replace the previously generated block
+        head = doc.index("| arch | shape |")
+        end = doc.index(done) + len(done)
+        doc = doc[:head] + table + "\n" + done + doc[end:]
+    else:
+        print("marker missing; appending", file=sys.stderr)
+        doc += "\n" + table + "\n" + done
+    with open(EXP, "w") as f:
+        f.write(doc)
+    print(f"rendered {n_ok_s}+{n_ok_m} cells into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Roofline table reader: renders §Roofline from the dry-run artifacts.
+
+Reads ``artifacts/dryrun_all.jsonl`` + ``artifacts/dryrun_paper.jsonl``
+(produced by ``python -m repro.launch.dryrun --all --both-meshes --out ...``)
+and emits the per-cell terms as CSV. Run the dry-run first; this module
+never builds 512-device meshes itself.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def run(quick=False):
+    rows = []
+    art = common.artifacts_dir()
+    recs = load(os.path.join(art, "dryrun_all.jsonl")) + load(
+        os.path.join(art, "dryrun_paper.jsonl")
+    )
+    for r in recs:
+        if r.get("mesh") != "16x16":
+            continue
+        if r.get("status") == "skipped":
+            rows.append(("roofline", r["arch"], r["shape"], "skipped",
+                         r["reason"][:40], "", "", "", ""))
+            continue
+        if r.get("status") != "ok" or "t_compute" not in r:
+            rows.append(("roofline", r.get("arch"), r.get("shape"),
+                         r.get("status"), r.get("error", "")[:40],
+                         "", "", "", ""))
+            continue
+        rows.append((
+            "roofline", r["arch"], r["shape"], r["bottleneck"],
+            f"{r['t_compute']:.3e}", f"{r['t_memory']:.3e}",
+            f"{r['t_collective']:.3e}",
+            f"{r.get('useful_flop_frac') or 0:.3f}",
+            r.get("bytes_per_device", ""),
+        ))
+    if not rows:
+        rows.append(("roofline", "no-dryrun-artifacts",
+                     "run python -m repro.launch.dryrun --all first",
+                     "", "", "", "", "", ""))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,36 @@
+"""Paper Table 2: memory footprint per method (index + raw vectors)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(quick=False):
+    rows = []
+    for ds in list(common.BENCH_DATASETS)[: 1 if quick else None]:
+        index = common.build_index(ds)
+        raw = index.vectors.nbytes
+        elemental = index.neighbors.nbytes
+        n, layers, m = index.neighbors.shape
+        rows.append(("table2", ds, "raw_vectors_mb", round(raw / 1e6, 2)))
+        rows.append((
+            "table2", ds, "iRangeGraph_mb",
+            round((raw + elemental + index.attrs.nbytes) / 1e6, 2),
+        ))
+        # single flat graph (Milvus/HNSW-style baseline): one layer of edges
+        rows.append((
+            "table2", ds, "flat_graph_mb",
+            round((raw + elemental / layers) / 1e6, 2),
+        ))
+        # the O(n^2) dedicated-graph strawman the paper argues against
+        rows.append((
+            "table2", ds, "oracle_all_ranges_gb(theoretical)",
+            round(n * n * m * 4 / 2 / 1e9, 1),
+        ))
+        rows.append(("table2", ds, "layers", layers))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,53 @@
+"""Multi-attribute conjunctive RFANN (paper §4): compare post-filtering,
+in-filtering, and the adaptive p = exp(-t) strategy (iRangeGraph+).
+
+    PYTHONPATH=src python examples/multi_attribute.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.core import multiattr
+from repro.data.pipeline import vector_dataset
+
+
+def main():
+    n, dim, B = 4096, 64, 128
+    vectors, attrs, queries = vector_dataset(
+        n, dim, seed=2, queries=B, n_attrs=2
+    )
+    index = RangeGraphIndex.build(
+        vectors, attrs[:, 0], BuildConfig(m=16, ef_construction=64)
+    )
+    # second attribute re-ordered to the index's rank order
+    attr2 = attrs[index.perm, 1].astype(np.float32)
+
+    rng = np.random.default_rng(0)
+    # ~2^-2 fraction on each attribute (paper §5.2.5 workload)
+    L = rng.integers(0, n // 2, B).astype(np.int32)
+    R = (L + n // 4).astype(np.int32)
+    lo2 = np.quantile(attr2, 0.3) * np.ones(B, np.float32)
+    hi2 = np.quantile(attr2, 0.8) * np.ones(B, np.float32)
+
+    gt, _ = multiattr.brute_force_multiattr(
+        index, attr2, queries, L, R, lo2, hi2, k=10
+    )
+    for mode in ("post", "in", "adaptive"):
+        multiattr.search_multiattr(  # compile
+            index, attr2, queries[:8], L[:8], R[:8], lo2[:8], hi2[:8],
+            k=10, ef=96, mode=mode,
+        )
+        t0 = time.perf_counter()
+        res = multiattr.search_multiattr(
+            index, attr2, queries, L, R, lo2, hi2, k=10, ef=96, mode=mode
+        )
+        dt = time.perf_counter() - t0
+        rec = recall(np.asarray(res.ids), gt)
+        label = {"post": "Post-filtering", "in": "In-filtering",
+                 "adaptive": "iRangeGraph+ (p=exp(-t))"}[mode]
+        print(f"{label:28s} qps={B / dt:8.1f}  recall@10={rec:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""granite-20b [dense]: 52L d6144 48H (MQA kv=1) d_ff=24576, vocab 49152.
+gpt-bigcode-style MQA + GELU MLP, code. [arXiv:2405.04324]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    mlp_kind="gelu",
+)

@@ -1,0 +1,14 @@
+"""iRangeGraph core: the paper's contribution as a composable JAX module."""
+from repro.core.build import BuildConfig, build_flat_graph, build_neighbor_table
+from repro.core.index import RangeGraphIndex, recall
+from repro.core.search import SearchResult, search_improvised
+
+__all__ = [
+    "BuildConfig",
+    "RangeGraphIndex",
+    "SearchResult",
+    "build_flat_graph",
+    "build_neighbor_table",
+    "recall",
+    "search_improvised",
+]

@@ -1,0 +1,227 @@
+"""Baseline RFANN strategies from the paper (§2.2, §5).
+
+All baselines share the index's stored artifacts so comparisons are
+apples-to-apples:
+
+  * Pre-filtering  — exact scan of the in-range slice (index.brute_force).
+  * Post-filtering — beam search on the root elemental graph (layer 0 == a
+    plain whole-dataset RNG graph), keep in-range results.
+  * In-filtering   — same graph, but only in-range neighbors are traversed.
+  * BasicSearch    — the §5.2.2 ablation: decompose [L, R] into O(log n)
+    disjoint tree segments, search each elemental graph, merge top-k.
+  * SuperPostfiltering-style — search the *smallest single segment covering*
+    [L, R] with post-filtering (the [29] strategy restricted to the tree's
+    preset ranges).
+  * Oracle         — a dedicated graph built from scratch on the exact range
+    (paper §5.2.4); impractical, used to measure the gap.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build as build_mod
+from repro.core import search as search_mod
+from repro.core import segment_tree
+from repro.core.index import RangeGraphIndex
+
+__all__ = [
+    "prefilter",
+    "postfilter",
+    "infilter",
+    "basic_search",
+    "super_postfilter",
+    "oracle_search",
+]
+
+
+def prefilter(index: RangeGraphIndex, queries, L, R, *, k=10, **_):
+    ids, dists = index.brute_force(queries, L, R, k=k)
+    B = ids.shape[0]
+    z = np.zeros((B,), np.int32)
+    nd = np.asarray(R) - np.asarray(L) + 1
+    return search_mod.SearchResult(
+        jnp.asarray(ids, jnp.int32), jnp.asarray(dists), jnp.asarray(z),
+        jnp.asarray(nd, jnp.int32),
+    )
+
+
+def postfilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+    return search_mod.search_filtered(
+        jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
+        jnp.asarray(queries, jnp.float32),
+        jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
+        mode="post", ef=ef, k=k,
+    )
+
+
+def infilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+    return search_mod.search_filtered(
+        jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
+        jnp.asarray(queries, jnp.float32),
+        jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
+        mode="in", ef=ef, k=k,
+    )
+
+
+def basic_search(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+    """Per query: search every covering segment's elemental graph, merge.
+
+    Queries are grouped by decomposition shape on the host; each segment
+    search is a batched ``search_fixed_layer`` call over all queries (a query
+    not using a slot gets an empty segment).
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    B = q.shape[0]
+    L = np.asarray(L)
+    R = np.asarray(R)
+    logn = index.logn
+    decomps = [segment_tree.decompose_range(int(L[i]), int(R[i]), logn)
+               for i in range(B)]
+    max_segs = max(len(d) for d in decomps)
+    all_ids, all_dists = [], []
+    nd_total = jnp.zeros((B,), jnp.int32)
+    vec = jnp.asarray(index.vectors)
+    nbrs = jnp.asarray(index.neighbors)
+    for s in range(max_segs):
+        lay = np.zeros((B,), np.int32)
+        lo = np.zeros((B,), np.int32)
+        hi = np.full((B,), -1, np.int32)  # empty segment by default
+        for i, d in enumerate(decomps):
+            if s < len(d):
+                lay[i], lo[i], hi[i] = d[s]
+        # batched per distinct layer (layer is a static arg)
+        ids_s = jnp.full((B, k), -1, jnp.int32)
+        dists_s = jnp.full((B, k), jnp.inf)
+        for layer in np.unique(lay):
+            sel = lay == layer
+            use_lo = jnp.asarray(np.where(sel, lo, 0), jnp.int32)
+            use_hi = jnp.asarray(np.where(sel, hi, -1), jnp.int32)
+            res = search_mod.search_fixed_layer(
+                vec, nbrs, q, use_lo, use_hi, layer=int(layer), ef=ef, k=k,
+            )
+            selj = jnp.asarray(sel)
+            ids_s = jnp.where(selj[:, None], res.ids, ids_s)
+            dists_s = jnp.where(selj[:, None], res.dists, dists_s)
+            nd_total = nd_total + jnp.where(selj, res.n_dists, 0)
+        all_ids.append(ids_s)
+        all_dists.append(dists_s)
+    ids = jnp.concatenate(all_ids, axis=1)
+    dists = jnp.concatenate(all_dists, axis=1)
+    _, take = jax.lax.top_k(-dists, k)
+    out_ids = jnp.take_along_axis(ids, take, 1)
+    out_dists = jnp.take_along_axis(dists, take, 1)
+    return search_mod.SearchResult(
+        out_ids, out_dists, jnp.zeros((B,), jnp.int32), nd_total
+    )
+
+
+def super_postfilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+    """Smallest covering segment + post-filtering (SuperPostfiltering-style)."""
+    q = jnp.asarray(queries, jnp.float32)
+    B = q.shape[0]
+    L = np.asarray(L)
+    R = np.asarray(R)
+    lay = np.zeros((B,), np.int32)
+    lo = np.zeros((B,), np.int32)
+    hi = np.zeros((B,), np.int32)
+    for i in range(B):
+        lay[i], lo[i], hi[i] = segment_tree.covering_segment(
+            int(L[i]), int(R[i]), index.logn
+        )
+    vec = jnp.asarray(index.vectors)
+    nbrs = jnp.asarray(index.neighbors)
+    Lj = jnp.asarray(L, jnp.int32)
+    Rj = jnp.asarray(R, jnp.int32)
+    out_ids = jnp.full((B, k), -1, jnp.int32)
+    out_dists = jnp.full((B, k), jnp.inf)
+    nd = jnp.zeros((B,), jnp.int32)
+    for layer in np.unique(lay):
+        sel = lay == layer
+        # post-filter inside the covering segment: traverse the segment's
+        # elemental graph, keep only [L, R] results
+        use_lo = jnp.asarray(np.where(sel, lo, 0), jnp.int32)
+        use_hi = jnp.asarray(np.where(sel, hi, -1), jnp.int32)
+
+        def filt(ids):
+            return (ids >= Lj[:, None]) & (ids <= Rj[:, None])
+
+        def nbr_fn(u, _layer=int(layer)):
+            row = nbrs[jnp.maximum(u, 0), _layer, :]
+            ok = (
+                (row >= 0)
+                & (row >= use_lo[:, None])
+                & (row <= use_hi[:, None])
+                & (u >= 0)[:, None]
+            )
+            return jnp.where(ok, row, -1)
+
+        n = index.n
+        hi_real = jnp.minimum(use_hi, n - 1)
+        entries = search_mod.range_entry_ids(use_lo, hi_real, n)
+        okent = (
+            (use_lo[:, None] <= hi_real[:, None])
+            & (entries >= use_lo[:, None])
+            & (entries <= hi_real[:, None])
+        )
+        entries = jnp.where(okent, entries, -1)
+        res = search_mod.beam_search(
+            vec, q, entries, nbr_fn, ef=ef, k=k, result_filter_fn=filt,
+        )
+        selj = jnp.asarray(sel)
+        out_ids = jnp.where(selj[:, None], res.ids, out_ids)
+        out_dists = jnp.where(selj[:, None], res.dists, out_dists)
+        nd = nd + jnp.where(selj, res.n_dists, 0)
+    return search_mod.SearchResult(
+        out_ids, out_dists, jnp.zeros((B,), jnp.int32), nd
+    )
+
+
+def oracle_search(
+    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
+    cache: dict | None = None,
+):
+    """Dedicated graph built from scratch per distinct range (§5.2.4).
+
+    ``cache`` maps (L, R) -> flat graph; pass a dict to amortize builds across
+    beam-size sweeps as the paper's Fig. 4 experiment does.
+    """
+    q = np.asarray(queries, np.float32)
+    B = q.shape[0]
+    L = np.asarray(L)
+    R = np.asarray(R)
+    out_ids = np.full((B, k), -1, np.int32)
+    out_dists = np.full((B, k), np.inf, np.float32)
+    nd = np.zeros((B,), np.int32)
+    cache = cache if cache is not None else {}
+    groups: dict[tuple[int, int], list[int]] = {}
+    for i in range(B):
+        groups.setdefault((int(L[i]), int(R[i])), []).append(i)
+    cfg = build_mod.BuildConfig(
+        m=index.build_cfg.m, ef_construction=index.build_cfg.ef_construction,
+    )
+    for (lo, hi), idxs in groups.items():
+        keyed = (lo, hi)
+        if keyed not in cache:
+            cache[keyed] = build_mod.build_flat_graph(
+                index.vectors[lo : hi + 1], cfg
+            )
+        g = cache[keyed]
+        sub = jnp.asarray(index.vectors[lo : hi + 1])
+        nn = sub.shape[0]
+        qq = jnp.asarray(q[idxs])
+        res = search_mod.search_fixed_layer(
+            sub, jnp.asarray(g), qq,
+            jnp.zeros((len(idxs),), jnp.int32),
+            jnp.full((len(idxs),), nn - 1, jnp.int32),
+            layer=0, ef=ef, k=k,
+        )
+        rids = np.asarray(res.ids)
+        out_ids[idxs] = np.where(rids >= 0, rids + lo, -1)
+        out_dists[idxs] = np.asarray(res.dists)
+        nd[idxs] = np.asarray(res.n_dists)
+    return search_mod.SearchResult(
+        jnp.asarray(out_ids), jnp.asarray(out_dists),
+        jnp.zeros((B,), jnp.int32), jnp.asarray(nd),
+    )

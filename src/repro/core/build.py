@@ -1,0 +1,196 @@
+"""Bulk-synchronous bottom-up construction of the iRangeGraph index.
+
+Paper §3.2.2, adapted for accelerators (DESIGN.md §2): instead of inserting
+nodes one at a time, every segment-tree level is built in one batched pass.
+For the segment ``[l, r]`` with children ``[l, mid]`` / ``[mid+1, r]`` and a
+node ``u`` in the left child:
+
+  * candidates inside the *own* child are copied from the child graph (an
+    edge pruned in the subset is pruned in the superset — paper's first case);
+  * candidates from the *sibling* child come from a beam search over the
+    sibling's already-built elemental graph — this is one
+    ``search_fixed_layer`` call for *all* n nodes of the level at once, each
+    query carrying its own sibling-segment bounds;
+  * the merged candidate set is RNG-pruned (``rng.prune_batch``).
+
+Levels whose segments are small (``<= brute_threshold``) skip the search and
+take the whole segment as candidates (exact RNG up to the degree cap).
+
+A reverse-edge pass (optional, on by default) mirrors HNSW's bidirectional
+insertion: each directed edge contributes its reverse as a candidate and the
+target re-prunes. This measurably improves connectivity of elemental graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng as rng_mod
+from repro.core import search as search_mod
+
+__all__ = ["BuildConfig", "build_neighbor_table", "build_flat_graph"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    m: int = 16                    # max out-degree per elemental graph
+    ef_construction: int = 64      # beam/candidates for sibling search (EF)
+    alpha: float = 1.0             # RNG alpha (1.0 == paper's rule)
+    brute_threshold: int = 128     # segments this small use exact candidates
+    add_reverse: bool = True       # bidirectional pass per level
+    fill_pruned: bool = True       # keepPrunedConnections
+    chunk: int = 4096              # nodes per batched pruning call
+
+
+def _level_sizes(n: int) -> tuple[int, int]:
+    logn = int(math.ceil(math.log2(max(n, 2))))
+    return logn, logn + 1
+
+
+def _reverse_pass(nbrs_lay: np.ndarray, vectors, seg_of, cfg: BuildConfig):
+    """Add reverse edges then re-prune each node's list. numpy + jitted prune.
+
+    nbrs_lay: int32[n, m] this level's edges. seg_of: int32[n] segment id of
+    each node at this level (reverse edges only ever connect nodes of the same
+    segment, but we keep the check for safety).
+    """
+    n, m = nbrs_lay.shape
+    # collect reverse candidates: for edge (u, v) add u to v's pool (capped)
+    us = np.repeat(np.arange(n, dtype=np.int32), m)
+    vs = nbrs_lay.reshape(-1)
+    ok = (vs >= 0) & (seg_of[us] == seg_of[np.maximum(vs, 0)])
+    us, vs = us[ok], vs[ok]
+    if us.size == 0:
+        return nbrs_lay
+    order = np.argsort(vs, kind="stable")
+    vs, us = vs[order], us[order]
+    counts = np.bincount(vs, minlength=n)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
+    pos = np.arange(vs.size, dtype=np.int64) - starts[vs]
+    rev_cap = 2 * m
+    keep = pos < rev_cap
+    C = m + rev_cap
+    cand = np.full((n, C), -1, np.int32)
+    cand[:, :m] = nbrs_lay
+    cand[vs[keep], m + pos[keep]] = us[keep]
+    out = np.empty((n, m), np.int32)
+    vecs = np.asarray(vectors)
+    for s in range(0, n, 4096):
+        e = min(n, s + 4096)
+        ids = jnp.asarray(cand[s:e])
+        cvec = jnp.asarray(vecs[np.maximum(cand[s:e], 0)])
+        u_vec = jnp.asarray(vecs[s:e])
+        d = jnp.sum((cvec - u_vec[:, None, :]) ** 2, axis=-1)
+        d = jnp.where(ids >= 0, d, jnp.inf)
+        out[s:e] = np.asarray(
+            rng_mod.prune_batch(
+                ids, d, cvec, m=m, alpha=cfg.alpha, fill=cfg.fill_pruned
+            )
+        )
+    return out
+
+
+def build_neighbor_table(
+    vectors: np.ndarray, cfg: BuildConfig | None = None, *, verbose=False
+) -> np.ndarray:
+    """Build the packed elemental-graph table ``int32[n, layers, m]``.
+
+    ``vectors`` must already be in attribute-rank order (see index.py).
+    """
+    cfg = cfg or BuildConfig()
+    vectors = np.asarray(vectors, np.float32)
+    n, d = vectors.shape
+    logn, layers = _level_sizes(n)
+    m = cfg.m
+    nbrs = np.full((n, layers, m), -1, np.int32)
+    vec_j = jnp.asarray(vectors)
+
+    ids_all = np.arange(n, dtype=np.int32)
+    for lay in range(logn - 1, -1, -1):  # leaves (logn) have no edges
+        size = 1 << (logn - lay)
+        seg_of = ids_all >> (logn - lay)
+        if size <= cfg.brute_threshold:
+            edges = _build_brute_level(vec_j, n, lay, logn, size, cfg)
+        else:
+            edges = _build_search_level(
+                vec_j, nbrs, n, lay, logn, size, cfg
+            )
+        if cfg.add_reverse:
+            edges = _reverse_pass(edges, vectors, seg_of, cfg)
+        nbrs[:, lay, :] = edges
+        if verbose:
+            deg = float((edges >= 0).sum(1).mean())
+            print(f"  layer {lay:2d} seg_size {size:7d} mean_deg {deg:.1f}")
+    return nbrs
+
+
+def _build_brute_level(vec_j, n, lay, logn, size, cfg: BuildConfig):
+    """Exact candidates = whole segment. One batched prune per chunk."""
+    m = cfg.m
+    out = np.empty((n, m), np.int32)
+    step = max(1, cfg.chunk // max(size, 1)) * size  # chunk on segment bounds
+    for s in range(0, n, step):
+        e = min(n, s + step)
+        u = jnp.arange(s, e, dtype=jnp.int32)
+        lo = (u >> (logn - lay)) << (logn - lay)
+        cand = lo[:, None] + jnp.arange(size, dtype=jnp.int32)[None, :]
+        valid = (cand < n) & (cand != u[:, None])
+        cand = jnp.where(valid, cand, -1)
+        cvec = vec_j[jnp.maximum(cand, 0)]
+        uvec = vec_j[u]
+        dist = jnp.sum((cvec - uvec[:, None, :]) ** 2, -1)
+        dist = jnp.where(valid, dist, jnp.inf)
+        out[s:e] = np.asarray(
+            rng_mod.prune_batch(
+                cand, dist, cvec, m=m, alpha=cfg.alpha, fill=cfg.fill_pruned
+            )
+        )
+    return out
+
+
+def _build_search_level(vec_j, nbrs, n, lay, logn, size, cfg: BuildConfig):
+    """Own-child copy + sibling beam search, then prune. Paper §3.2.2."""
+    m, efc = cfg.m, cfg.ef_construction
+    child_lay = lay + 1
+    nbrs_j = jnp.asarray(nbrs)  # children of this level are already built
+    out = np.empty((n, m), np.int32)
+    half = size // 2
+    for s in range(0, n, cfg.chunk):
+        e = min(n, s + cfg.chunk)
+        u = jnp.arange(s, e, dtype=jnp.int32)
+        lo = (u >> (logn - lay)) << (logn - lay)
+        mid = lo + half - 1
+        in_left = u <= mid
+        sib_lo = jnp.where(in_left, mid + 1, lo)
+        sib_hi = jnp.where(in_left, lo + size - 1, mid)
+        res = search_mod.search_fixed_layer(
+            vec_j, nbrs_j, vec_j[u], sib_lo, sib_hi,
+            layer=child_lay, ef=efc, k=efc,
+        )
+        own = nbrs_j[u, child_lay, :]                   # int32[B, m]
+        cand = jnp.concatenate([own, res.ids], axis=1)  # [B, m + efc]
+        valid = (cand >= 0) & (cand != u[:, None]) & (cand < n)
+        cand = jnp.where(valid, cand, -1)
+        cvec = vec_j[jnp.maximum(cand, 0)]
+        dist = jnp.sum((cvec - vec_j[u][:, None, :]) ** 2, -1)
+        dist = jnp.where(valid, dist, jnp.inf)
+        out[s:e] = np.asarray(
+            rng_mod.prune_batch(
+                cand, dist, cvec, m=m, alpha=cfg.alpha, fill=cfg.fill_pruned
+            )
+        )
+    return out
+
+
+def build_flat_graph(
+    vectors: np.ndarray, cfg: BuildConfig | None = None
+) -> np.ndarray:
+    """From-scratch single RNG graph over ``vectors`` (Oracle baseline,
+    paper §5.2.4). Returns int32[n, 1, m] so it plugs into the same search
+    code at layer 0. Built by the same bottom-up machinery on the slice."""
+    tbl = build_neighbor_table(vectors, cfg)
+    return tbl[:, :1, :]

@@ -1,0 +1,190 @@
+"""Public iRangeGraph index API.
+
+``RangeGraphIndex.build(vectors, attrs)`` sorts objects by attribute value
+(stable, so duplicates keep insertion order — paper §3.4's duplicate
+discussion), builds the packed elemental-graph table, and exposes:
+
+  * ``search(queries, ranges, ...)`` — RFANN in attribute-VALUE space;
+  * ``search_ranks(queries, L, R, ...)`` — RFANN in rank space;
+  * value<->rank mapping via binary search (paper §2.2);
+  * serialization (msgpack + zstd, content-checksummed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import math
+
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+from repro.core import build as build_mod
+from repro.core import search as search_mod
+
+__all__ = ["RangeGraphIndex"]
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    return {"dtype": str(a.dtype), "shape": list(a.shape), "data": a.tobytes()}
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+
+
+@dataclasses.dataclass
+class RangeGraphIndex:
+    vectors: np.ndarray        # f32[n, d], rank order
+    attrs: np.ndarray          # f64[n], sorted attribute values
+    perm: np.ndarray           # original index of rank i
+    neighbors: np.ndarray      # int32[n, layers, m]
+    m: int
+    logn: int
+    build_cfg: build_mod.BuildConfig
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        attrs: np.ndarray,
+        cfg: build_mod.BuildConfig | None = None,
+        *,
+        verbose: bool = False,
+    ) -> "RangeGraphIndex":
+        cfg = cfg or build_mod.BuildConfig()
+        vectors = np.asarray(vectors, np.float32)
+        attrs = np.asarray(attrs, np.float64)
+        n = vectors.shape[0]
+        perm = np.argsort(attrs, kind="stable").astype(np.int64)
+        vectors = np.ascontiguousarray(vectors[perm])
+        attrs = attrs[perm]
+        nbrs = build_mod.build_neighbor_table(vectors, cfg, verbose=verbose)
+        logn = int(math.ceil(math.log2(max(n, 2))))
+        return cls(vectors, attrs, perm, nbrs, cfg.m, logn, cfg)
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.vectors.nbytes + self.neighbors.nbytes + self.attrs.nbytes
+
+    # -- range mapping -------------------------------------------------------
+    def ranks_of(self, lo_val, hi_val):
+        """Map inclusive attribute-value ranges to inclusive rank ranges."""
+        L = np.searchsorted(self.attrs, np.asarray(lo_val), side="left")
+        R = np.searchsorted(self.attrs, np.asarray(hi_val), side="right") - 1
+        return L.astype(np.int32), R.astype(np.int32)
+
+    # -- query ---------------------------------------------------------------
+    def search_ranks(
+        self, queries, L, R, *, k=10, ef=64, skip_layers=True, metric="l2",
+    ) -> search_mod.SearchResult:
+        """RFANN in rank space: per-query inclusive rank ranges [L, R]."""
+        return search_mod.search_improvised(
+            jnp.asarray(self.vectors),
+            jnp.asarray(self.neighbors),
+            jnp.asarray(queries, jnp.float32),
+            jnp.asarray(L, jnp.int32),
+            jnp.asarray(R, jnp.int32),
+            logn=self.logn,
+            m_out=self.m,
+            ef=ef,
+            k=k,
+            skip_layers=skip_layers,
+            metric=metric,
+        )
+
+    def search(self, queries, lo_val, hi_val, **kw) -> search_mod.SearchResult:
+        L, R = self.ranks_of(lo_val, hi_val)
+        return self.search_ranks(queries, L, R, **kw)
+
+    def original_ids(self, rank_ids):
+        """Map rank-space result ids back to the caller's original ids."""
+        rank_ids = np.asarray(rank_ids)
+        out = np.where(rank_ids >= 0, self.perm[np.maximum(rank_ids, 0)], -1)
+        return out
+
+    # -- ground truth ---------------------------------------------------------
+    def brute_force(self, queries, L, R, *, k=10, metric="l2"):
+        """Exact in-range top-k (== the Pre-filtering strategy). numpy."""
+        q = np.asarray(queries, np.float32)
+        L = np.asarray(L)
+        R = np.asarray(R)
+        ids = np.full((q.shape[0], k), -1, np.int64)
+        dists = np.full((q.shape[0], k), np.inf, np.float32)
+        for i in range(q.shape[0]):
+            lo, hi = int(L[i]), int(R[i])
+            if hi < lo:
+                continue
+            x = self.vectors[lo : hi + 1]
+            if metric == "l2":
+                d = ((x - q[i]) ** 2).sum(1)
+            else:
+                d = -(x @ q[i])
+            kk = min(k, d.shape[0])
+            part = np.argpartition(d, kk - 1)[:kk]
+            part = part[np.argsort(d[part], kind="stable")]
+            ids[i, :kk] = part + lo
+            dists[i, :kk] = d[part]
+        return ids, dists
+
+    # -- serialization ---------------------------------------------------------
+    def save(self, path: str):
+        payload = {
+            "vectors": _pack_array(self.vectors),
+            "attrs": _pack_array(self.attrs),
+            "perm": _pack_array(self.perm),
+            "neighbors": _pack_array(self.neighbors),
+            "m": self.m,
+            "logn": self.logn,
+            "cfg": dataclasses.asdict(self.build_cfg),
+        }
+        raw = msgpack.packb(payload)
+        digest = hashlib.sha256(raw).hexdigest()
+        blob = msgpack.packb({"sha256": digest, "payload": raw})
+        with open(path, "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=3).compress(blob))
+
+    @classmethod
+    def load(cls, path: str) -> "RangeGraphIndex":
+        with open(path, "rb") as f:
+            blob = zstandard.ZstdDecompressor().decompress(f.read())
+        outer = msgpack.unpackb(blob)
+        raw = outer["payload"]
+        if hashlib.sha256(raw).hexdigest() != outer["sha256"]:
+            raise IOError(f"checksum mismatch loading {path}")
+        p = msgpack.unpackb(raw)
+        return cls(
+            vectors=_unpack_array(p["vectors"]),
+            attrs=_unpack_array(p["attrs"]),
+            perm=_unpack_array(p["perm"]),
+            neighbors=_unpack_array(p["neighbors"]),
+            m=p["m"],
+            logn=p["logn"],
+            build_cfg=build_mod.BuildConfig(**p["cfg"]),
+        )
+
+
+def recall(result_ids, gt_ids) -> float:
+    """Mean recall@k of result ids vs ground-truth ids (both [B, k])."""
+    result_ids = np.asarray(result_ids)
+    gt_ids = np.asarray(gt_ids)
+    hits = 0
+    total = 0
+    for r, g in zip(result_ids, gt_ids):
+        gset = set(int(x) for x in g if x >= 0)
+        if not gset:
+            continue
+        hits += len(gset & set(int(x) for x in r if x >= 0))
+        total += len(gset)
+    return hits / max(total, 1)

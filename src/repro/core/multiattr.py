@@ -1,0 +1,123 @@
+"""Multi-attribute RFANN (paper §4).
+
+The index is built on attribute A1; a conjunctive query carries a rank range
+[L, R] on A1 plus value ranges on the other attributes. Search runs on the
+improvised dedicated graph for [L, R]; neighbors failing the *other*
+predicates are visited with probability ``p``:
+
+  * ``p = 0``        -> In-filtering
+  * ``p = 1``        -> Post-filtering
+  * ``p = exp(-t)``  -> the paper's adaptive rule (iRangeGraph+), where ``t``
+    is the number of consecutive out-of-range objects expanded on the search
+    path — §5.2.5 reports ~70% qps gain at 0.9 recall from this.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edge_select
+from repro.core import search as search_mod
+from repro.core.index import RangeGraphIndex
+
+__all__ = ["search_multiattr"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("logn", "m_out", "ef", "k", "mode", "metric",
+                     "max_iters"),
+)
+def _search_multiattr_jit(
+    vectors, nbrs, attr2, queries, L, R, lo2, hi2, rng, *,
+    logn, m_out, ef, k, mode, metric="l2", max_iters=None,
+):
+    n = vectors.shape[0]
+    entries = search_mod.range_entry_ids(L, jnp.minimum(R, n - 1), n)
+    ok = (entries >= L[:, None]) & (entries <= R[:, None])
+    entries = jnp.where(ok, entries, -1)
+
+    def nbr_fn(u):
+        return edge_select.select_edges_batch(
+            nbrs, u, L, R, logn=logn, m_out=m_out, skip_layers=True
+        )
+
+    def filt(ids):
+        a = attr2[ids]
+        return (a >= lo2[:, None]) & (a <= hi2[:, None])
+
+    if mode == "post":
+        visit_prob_fn = None
+    elif mode == "in":
+        def visit_prob_fn(ids, t):
+            return jnp.zeros(ids.shape, jnp.float32)
+    elif mode == "adaptive":
+        def visit_prob_fn(ids, t):
+            p = jnp.exp(-t.astype(jnp.float32))
+            return jnp.broadcast_to(p[:, None], ids.shape)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    return search_mod.beam_search(
+        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
+        max_iters=max_iters, result_filter_fn=filt,
+        visit_prob_fn=visit_prob_fn, rng=rng,
+    )
+
+
+def search_multiattr(
+    index: RangeGraphIndex, attr2, queries, L, R, lo2, hi2, *,
+    k=10, ef=64, mode="adaptive", seed=0,
+):
+    """Conjunctive RFANN query.
+
+    attr2: second attribute values in RANK-of-A1 order (i.e. aligned with
+      ``index.vectors``); lo2/hi2: per-query inclusive value ranges on attr2.
+    mode: "post" | "in" | "adaptive" (= iRangeGraph+'s p = exp(-t)).
+    """
+    return _search_multiattr_jit(
+        jnp.asarray(index.vectors),
+        jnp.asarray(index.neighbors),
+        jnp.asarray(attr2, jnp.float32),
+        jnp.asarray(queries, jnp.float32),
+        jnp.asarray(L, jnp.int32),
+        jnp.asarray(R, jnp.int32),
+        jnp.asarray(lo2, jnp.float32),
+        jnp.asarray(hi2, jnp.float32),
+        jax.random.PRNGKey(seed),
+        logn=index.logn,
+        m_out=index.m,
+        ef=ef,
+        k=k,
+        mode=mode,
+    )
+
+
+def brute_force_multiattr(index, attr2, queries, L, R, lo2, hi2, *, k=10):
+    """Exact conjunctive top-k (ground truth)."""
+    import numpy as np
+
+    q = np.asarray(queries, np.float32)
+    a2 = np.asarray(attr2)
+    B = q.shape[0]
+    ids = np.full((B, k), -1, np.int64)
+    dists = np.full((B, k), np.inf, np.float32)
+    L = np.asarray(L); R = np.asarray(R)
+    lo2 = np.asarray(lo2); hi2 = np.asarray(hi2)
+    for i in range(B):
+        lo, hi = int(L[i]), int(R[i])
+        if hi < lo:
+            continue
+        sel = np.arange(lo, hi + 1)
+        sel = sel[(a2[sel] >= lo2[i]) & (a2[sel] <= hi2[i])]
+        if sel.size == 0:
+            continue
+        d = ((index.vectors[sel] - q[i]) ** 2).sum(1)
+        kk = min(k, d.shape[0])
+        part = np.argpartition(d, kk - 1)[:kk]
+        part = part[np.argsort(d[part], kind="stable")]
+        ids[i, :kk] = sel[part]
+        dists[i, :kk] = d[part]
+    return ids, dists

@@ -1,0 +1,101 @@
+"""Vectorized RNG-style edge pruning (paper Def. 2.1 / DiskANN alpha rule).
+
+Candidates for a node ``u`` are processed in ascending distance-to-``u``
+order; candidate ``v`` is pruned iff some already-kept ``w`` satisfies
+``alpha * delta(w, v) < delta(u, v)`` (with ``alpha = 1`` this is exactly the
+RNG rule — the symmetric first condition ``delta(u, w) < delta(u, v)`` holds
+automatically from the processing order). Distances here are *squared* L2, so
+``alpha`` acts as the square of DiskANN's alpha; ``alpha=1`` is identical.
+
+The sequential keep-set recurrence is an O(C) ``fori_loop`` over a
+precomputed candidate-candidate distance matrix, vmapped over every node of a
+segment-tree level at once — the bulk-synchronous construction of DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["prune", "prune_batch", "pairwise_sq_dists"]
+
+_INF = jnp.float32(jnp.inf)
+
+
+def pairwise_sq_dists(x):
+    """x[..., C, d] -> squared L2 distances [..., C, C]."""
+    xx = jnp.sum(x * x, axis=-1)
+    xy = jnp.einsum("...id,...jd->...ij", x, x)
+    d = xx[..., :, None] - 2.0 * xy + xx[..., None, :]
+    return jnp.maximum(d, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "fill"))
+def prune(cand_ids, cand_dists, cc_dists, *, m, alpha=1.0, fill=True):
+    """Prune one node's candidate list to <= m RNG edges.
+
+    Args:
+      cand_ids: int32[C]; -1 = invalid slot.
+      cand_dists: f32[C] squared distance to u (inf for invalid).
+      cc_dists: f32[C, C] squared candidate-candidate distances.
+      m: max out-degree.
+      alpha: >= 1 keeps more (longer) edges; applied on squared distances.
+      fill: fill remaining slots with nearest pruned candidates (HNSW's
+        keepPrunedConnections) — improves connectivity on small segments.
+
+    Returns: int32[m] neighbor ids (-1 padded).
+    """
+    C = cand_ids.shape[0]
+    order = jnp.argsort(cand_dists, stable=True)
+    ids = cand_ids[order]
+    du = cand_dists[order]
+    cc = cc_dists[order][:, order]
+    valid = (ids >= 0) & jnp.isfinite(du)
+    # duplicate ids keep only the first occurrence
+    ids_for_dup = jnp.where(valid, ids, jnp.int32(2**30) + jnp.arange(C))
+    o2 = jnp.argsort(ids_for_dup, stable=True)
+    first = jnp.zeros((C,), bool).at[o2].set(
+        jnp.concatenate(
+            [jnp.array([True]), ids_for_dup[o2][1:] != ids_for_dup[o2][:-1]]
+        )
+    )
+    valid &= first
+
+    def body(j, carry):
+        keep, count = carry
+        pruned = jnp.any(keep & (alpha * cc[:, j] < du[j]))
+        add = valid[j] & ~pruned & (count < m)
+        return keep.at[j].set(add), count + add.astype(jnp.int32)
+
+    keep, _ = jax.lax.fori_loop(
+        0, C, body, (jnp.zeros((C,), bool), jnp.int32(0))
+    )
+
+    if fill:
+        key = jnp.where(
+            valid,
+            jnp.where(keep, jnp.arange(C), C + jnp.arange(C)),
+            jnp.int32(2**30),
+        )
+    else:
+        key = jnp.where(keep, jnp.arange(C), jnp.int32(2**30))
+    kk = min(m, C)
+    _, take = jax.lax.top_k(-key, kk)
+    out = jnp.where(key[take] < 2**30, ids[take], jnp.int32(-1))
+    if kk < m:
+        out = jnp.concatenate([out, jnp.full((m - kk,), -1, jnp.int32)])
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("m", "fill"))
+def prune_batch(cand_ids, cand_dists, cand_vecs, *, m, alpha=1.0, fill=True):
+    """Batched prune: computes cc distances then vmaps ``prune``.
+
+    cand_ids: int32[B, C]; cand_dists: f32[B, C]; cand_vecs: f32[B, C, d].
+    Returns int32[B, m].
+    """
+    cc = pairwise_sq_dists(cand_vecs)
+    return jax.vmap(
+        functools.partial(prune, m=m, alpha=alpha, fill=fill)
+    )(cand_ids, cand_dists, cc)

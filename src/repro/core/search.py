@@ -1,0 +1,346 @@
+"""Batched greedy beam search engines.
+
+The paper's query phase is greedy beam search (HNSW-style dynamic list of
+size ``ef``) over a graph whose edges are improvised per query range
+(Algorithm 1). On TPU the priority-queue formulation becomes a fixed-shape
+lockstep loop:
+
+  * per-query state: candidate list ``(ids, dists, visited)`` of size ``ef``
+    holding the best-so-far, a visited bitmap over the dataset, an active
+    flag;
+  * each iteration expands the best unvisited candidate of every active query
+    simultaneously, gathers its (improvised) out-edges, computes distances in
+    one batched op (the Pallas distance kernel on TPU), and merges with a
+    single ``top_k``;
+  * termination (best unvisited worse than the worst of a full list) becomes
+    a mask; finished queries coast.
+
+``beam_search`` is generic over a ``nbr_fn`` so the same engine serves the
+improvised graph, single elemental graphs (index construction, BasicSearch,
+SuperPostfiltering), the root graph with post-/in-filtering, and the
+multi-attribute variant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edge_select
+
+__all__ = [
+    "SearchResult",
+    "beam_search",
+    "search_improvised",
+    "search_fixed_layer",
+    "search_filtered",
+]
+
+_INF = jnp.float32(jnp.inf)
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray      # int32[B, k] (-1 padded)
+    dists: jnp.ndarray    # float32[B, k]
+    n_hops: jnp.ndarray   # int32[B]   nodes expanded
+    n_dists: jnp.ndarray  # int32[B]   distance computations
+
+
+def _pairdist(q, x, metric):
+    """Distance between queries q[B, d] and points x[B, M, d] -> [B, M].
+
+    Inputs may be bf16 (the storage-dtype hillclimb); math is f32.
+    """
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if metric == "l2":
+        # ||x||^2 - 2 x.q + ||q||^2 ; keep ||q||^2 for exactness of ordering
+        xx = jnp.sum(x * x, axis=-1)
+        qq = jnp.sum(q * q, axis=-1, keepdims=True)
+        xq = jnp.einsum("bd,bmd->bm", q, x)
+        return xx - 2.0 * xq + qq
+    if metric == "ip":
+        return -jnp.einsum("bd,bmd->bm", q, x)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def beam_search(
+    vectors: jnp.ndarray,          # f32[n, d]
+    queries: jnp.ndarray,          # f32[B, d]
+    entry_ids: jnp.ndarray,        # int32[B, E] (-1 for unused)
+    nbr_fn: Callable,              # int32[B] -> int32[B, M]
+    *,
+    ef: int,
+    k: int,
+    max_iters: int | None = None,
+    metric: str = "l2",
+    result_filter_fn: Callable | None = None,
+    visit_prob_fn: Callable | None = None,
+    rng: jax.Array | None = None,
+) -> SearchResult:
+    """Generic batched beam search. See module docstring.
+
+    result_filter_fn: optional ``ids[B,M] -> bool[B,M]``; when given, the
+      navigation list accepts everything but the *result* list only accepts
+      ids passing the filter (multi-attribute post-filtering semantics).
+    visit_prob_fn: optional ``(ids[B,M], t[B]) -> p[B,M]`` probability of
+      visiting an id that fails the result filter (the paper's §4
+      generalization; p=1 is post-filtering, p=0 in-filtering). Requires rng.
+    """
+    n, d = vectors.shape
+    B = queries.shape[0]
+    if max_iters is None:
+        max_iters = 4 * ef + 32
+
+    two_lists = result_filter_fn is not None
+
+    def init_state():
+        e = entry_ids
+        valid = e >= 0
+        ex = vectors[jnp.maximum(e, 0)]
+        dists = jnp.where(valid, _pairdist(queries, ex, metric), _INF)
+        E = e.shape[1]
+        pad = ef - E
+        cand_ids = jnp.concatenate(
+            [jnp.where(valid, e, -1), jnp.full((B, pad), -1, jnp.int32)], axis=1
+        )
+        cand_dists = jnp.concatenate([dists, jnp.full((B, pad), _INF)], axis=1)
+        cand_vis = jnp.zeros((B, ef), bool)
+        visited = jnp.zeros((B, n), bool)
+        visited = _mark(visited, e, valid)
+        if two_lists:
+            ok = result_filter_fn(jnp.maximum(e, 0)) & valid
+            res_ids = jnp.concatenate(
+                [jnp.where(ok, e, -1), jnp.full((B, pad), -1, jnp.int32)], 1
+            )
+            res_dists = jnp.concatenate(
+                [jnp.where(ok, dists, _INF), jnp.full((B, pad), _INF)], 1
+            )
+        else:
+            res_ids = cand_ids
+            res_dists = cand_dists
+        t = jnp.zeros((B,), jnp.int32)  # consecutive out-of-range counter
+        stats = (jnp.zeros((B,), jnp.int32), jnp.sum(valid, 1, dtype=jnp.int32))
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        return (
+            cand_ids, cand_dists, cand_vis, visited,
+            res_ids, res_dists, t, jnp.ones((B,), bool), stats, key,
+            jnp.int32(0),
+        )
+
+    def _mark(visited, ids, valid):
+        b = jnp.arange(B)[:, None]
+        return visited.at[b, jnp.maximum(ids, 0)].max(valid)
+
+    def cond(state):
+        *_, active, _stats, _key, it = state
+        return jnp.any(active) & (it < max_iters)
+
+    def body(state):
+        (cand_ids, cand_dists, cand_vis, visited,
+         res_ids, res_dists, t, active, stats, key, it) = state
+        n_hops, n_dists = stats
+
+        unvisited = jnp.where(
+            cand_vis | (cand_ids < 0), _INF, cand_dists
+        )
+        best_slot = jnp.argmin(unvisited, axis=1)
+        best_dist = jnp.take_along_axis(unvisited, best_slot[:, None], 1)[:, 0]
+        worst = jnp.max(jnp.where(cand_ids >= 0, cand_dists, -_INF), axis=1)
+        full = jnp.all(cand_ids >= 0, axis=1)
+        progress = jnp.isfinite(best_dist) & (~full | (best_dist <= worst))
+        active = active & progress
+
+        u = jnp.take_along_axis(cand_ids, best_slot[:, None], 1)[:, 0]
+        u = jnp.where(active, u, -1)
+        cand_vis = jnp.where(
+            active[:, None]
+            & (jnp.arange(ef)[None, :] == best_slot[:, None]),
+            True,
+            cand_vis,
+        )
+        n_hops = n_hops + active.astype(jnp.int32)
+
+        nbr = nbr_fn(u)                       # [B, M]
+        M = nbr.shape[1]
+        nvalid = (nbr >= 0) & active[:, None]
+        b = jnp.arange(B)[:, None]
+        seen = visited[b, jnp.maximum(nbr, 0)]
+        nvalid &= ~seen
+
+        if two_lists:
+            in_rng = result_filter_fn(jnp.maximum(nbr, 0))
+            if visit_prob_fn is not None:
+                key, sub = jax.random.split(key)
+                p = visit_prob_fn(jnp.maximum(nbr, 0), t)
+                coin = jax.random.uniform(sub, (B, M))
+                visit_out = coin < p
+            else:
+                visit_out = jnp.ones((B, M), bool)  # post-filtering
+            nvalid &= in_rng | visit_out
+            # consecutive out-of-range counter follows the expanded node u
+            u_in = result_filter_fn(jnp.maximum(u, 0)[:, None])[:, 0]
+            u_out = ~u_in & (u >= 0)
+            t = jnp.where(active, jnp.where(u_out, t + 1, 0), t)
+
+        visited = _mark(visited, nbr, nvalid)
+        nx = vectors[jnp.maximum(nbr, 0)]
+        ndist = jnp.where(nvalid, _pairdist(queries, nx, metric), _INF)
+        n_dists = n_dists + jnp.sum(nvalid, axis=1, dtype=jnp.int32)
+
+        # merge into navigation list
+        all_ids = jnp.concatenate([cand_ids, jnp.where(nvalid, nbr, -1)], 1)
+        all_dists = jnp.concatenate([cand_dists, ndist], 1)
+        all_vis = jnp.concatenate([cand_vis, jnp.zeros((B, M), bool)], 1)
+        _, idx = jax.lax.top_k(-all_dists, ef)
+        cand_ids = jnp.take_along_axis(all_ids, idx, 1)
+        cand_dists = jnp.take_along_axis(all_dists, idx, 1)
+        cand_vis = jnp.take_along_axis(all_vis, idx, 1)
+
+        if two_lists:
+            rvalid = nvalid & in_rng
+            r_ids = jnp.concatenate([res_ids, jnp.where(rvalid, nbr, -1)], 1)
+            r_dists = jnp.concatenate(
+                [res_dists, jnp.where(rvalid, ndist, _INF)], 1
+            )
+            _, ridx = jax.lax.top_k(-r_dists, ef)
+            res_ids = jnp.take_along_axis(r_ids, ridx, 1)
+            res_dists = jnp.take_along_axis(r_dists, ridx, 1)
+        else:
+            res_ids, res_dists = cand_ids, cand_dists
+
+        return (cand_ids, cand_dists, cand_vis, visited,
+                res_ids, res_dists, t, active, (n_hops, n_dists), key,
+                it + 1)
+
+    state = init_state()
+    state = jax.lax.while_loop(cond, body, state)
+    (_, _, _, _, res_ids, res_dists, _, _, stats, _, _) = state
+    _, idx = jax.lax.top_k(-res_dists, k)
+    out_ids = jnp.take_along_axis(res_ids, idx, 1)
+    out_dists = jnp.take_along_axis(res_dists, idx, 1)
+    out_ids = jnp.where(jnp.isfinite(out_dists), out_ids, -1)
+    return SearchResult(out_ids, out_dists, stats[0], stats[1])
+
+
+# ---------------------------------------------------------------------------
+# Entry-point helpers
+# ---------------------------------------------------------------------------
+
+def range_entry_ids(L, R, n, num_entries=3):
+    """Deterministic in-range entry points: midpoint + quartiles of [L, R]."""
+    fracs = jnp.array([0.5, 0.25, 0.75, 0.0, 1.0][:num_entries])
+    span = (R - L).astype(jnp.float32)[..., None]
+    ids = L[..., None] + jnp.round(span * fracs[None, :]).astype(jnp.int32)
+    ids = jnp.clip(ids, 0, n - 1)
+    # dedupe within the row: later duplicates -> -1
+    sortd = jnp.sort(ids, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(sortd[..., :1], bool), sortd[..., 1:] == sortd[..., :-1]],
+        axis=-1,
+    )
+    return jnp.where(dup, -1, sortd)
+
+
+# ---------------------------------------------------------------------------
+# Concrete searches
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("logn", "m_out", "ef", "k", "skip_layers", "metric",
+                     "max_iters"),
+)
+def search_improvised(
+    vectors, nbrs, queries, L, R, *, logn, m_out, ef, k,
+    skip_layers=True, metric="l2", max_iters=None,
+):
+    """The paper's query path: beam search on the improvised dedicated graph.
+
+    L, R: int32[B] per-query inclusive rank ranges.
+    """
+    n = vectors.shape[0]
+    entries = range_entry_ids(L, jnp.minimum(R, n - 1), n)
+    ok = (entries >= L[:, None]) & (entries <= R[:, None])
+    entries = jnp.where(ok, entries, -1)
+
+    def nbr_fn(u):
+        return edge_select.select_edges_batch(
+            nbrs, u, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers
+        )
+
+    return beam_search(
+        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
+        max_iters=max_iters,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layer", "ef", "k", "metric", "max_iters"),
+)
+def search_fixed_layer(
+    vectors, nbrs, queries, seg_lo, seg_hi, *, layer, ef, k,
+    metric="l2", max_iters=None,
+):
+    """Beam search on one elemental graph (segment ``[seg_lo, seg_hi]`` at
+    ``layer``). Used during construction, and by BasicSearch /
+    SuperPostfiltering baselines."""
+    n = vectors.shape[0]
+    hi_real = jnp.minimum(seg_hi, n - 1)
+    entries = range_entry_ids(seg_lo, hi_real, n)
+    # guard: empty / padded-away segments contribute no entry points, and an
+    # entry must actually lie inside its segment
+    ok = (
+        (seg_lo[:, None] <= hi_real[:, None])
+        & (entries >= seg_lo[:, None])
+        & (entries <= hi_real[:, None])
+    )
+    entries = jnp.where(ok, entries, -1)
+
+    def nbr_fn(u):
+        row = nbrs[jnp.maximum(u, 0), layer, :]
+        ok = (row >= 0) & (row >= seg_lo[:, None]) & (row <= seg_hi[:, None])
+        return jnp.where(ok & (u >= 0)[:, None], row, -1)
+
+    return beam_search(
+        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
+        max_iters=max_iters,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "ef", "k", "metric", "max_iters"),
+)
+def search_filtered(
+    vectors, nbrs, queries, L, R, *, mode, ef, k, metric="l2",
+    max_iters=None, rng=None,
+):
+    """Post-/In-filtering baselines on the root elemental graph (layer 0).
+
+    mode: "post" visits everything, keeps in-range results;
+          "in"   only traverses in-range neighbors.
+    """
+    n = vectors.shape[0]
+    mid = jnp.clip((L + R) // 2, 0, n - 1)
+    entries = jnp.stack([mid, jnp.zeros_like(mid) + n // 2], axis=1)
+
+    def filt(ids):
+        return (ids >= L[:, None]) & (ids <= R[:, None])
+
+    def nbr_fn(u):
+        row = nbrs[jnp.maximum(u, 0), 0, :]
+        ok = (row >= 0) & (u >= 0)[:, None]
+        if mode == "in":
+            ok &= filt(row)
+        return jnp.where(ok, row, -1)
+
+    return beam_search(
+        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
+        max_iters=max_iters,
+        result_filter_fn=filt,
+        rng=rng,
+    )

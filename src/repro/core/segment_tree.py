@@ -1,0 +1,119 @@
+"""Implicit segment-tree math for iRangeGraph.
+
+The tree is a perfect binary tree over the padded rank domain ``[0, 2**logn)``.
+Objects carry ids equal to their attribute rank (``0..n-1``); ids in
+``[n, 2**logn)`` do not exist but keep the closed forms branch-free.
+
+Layer numbering follows the paper: layer ``0`` is the root (one segment of
+length ``2**logn``); layer ``logn`` is the leaves (segments of length 1).
+Everything here is pure integer math on jnp arrays so it vmaps/jits cleanly —
+this is the TPU replacement for the paper's branchy per-node traversal.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "num_layers",
+    "seg_bounds",
+    "scan_mask",
+    "decompose_range",
+    "covering_segment",
+]
+
+
+def num_layers(n: int) -> int:
+    """Number of layers (= logn + 1) for a dataset of n objects."""
+    return int(np.ceil(np.log2(max(int(n), 2)))) + 1
+
+
+def seg_bounds(u, lay, logn):
+    """Inclusive [lo, hi] of the segment containing object ``u`` at ``lay``.
+
+    Works elementwise on arrays (broadcasting u against lay).
+    """
+    s = logn - lay
+    lo = (u >> s) << s
+    hi = lo + (1 << s) - 1
+    return lo, hi
+
+
+def scan_mask(u, L, R, logn, *, skip_layers: bool = True):
+    """Vectorized layer-scan mask of Algorithm 1 for one object.
+
+    Returns a bool vector of length ``logn + 1``: ``mask[lay]`` is True iff the
+    edges of ``u`` stored at layer ``lay`` are scanned when improvising the
+    dedicated graph for query range ``[L, R]``.
+
+    ``skip_layers=True`` is the paper's efficient algorithm (a layer is skipped
+    when the child segment's intersection with [L, R] equals the current
+    segment's). ``skip_layers=False`` is the naive O(m log n) variant
+    (``iRangeGraph-`` in the ablation) that scans every layer until the first
+    segment fully covered by the query range.
+
+    All of u, L, R are scalars (ints or 0-d arrays); vmap for batches.
+    """
+    lays = jnp.arange(logn + 1)
+    lo, hi = seg_bounds(u, lays, logn)
+
+    inter_lo = jnp.maximum(lo, L)
+    inter_hi = jnp.minimum(hi, R)
+
+    terminal = (lo >= L) & (hi <= R)
+    # Leaf is always terminal when u is in range, so argmax finds the first
+    # fully-covered layer; scanning stops there (Algorithm 1 line 9).
+    first_term = jnp.argmax(terminal)
+    reachable = lays <= first_term
+
+    if not skip_layers:
+        return reachable
+
+    # skip[lay] == intersection(child(lay), [L,R]) == intersection(lay, [L,R])
+    # child intersections are the next layer's intersections shifted up.
+    child_inter_lo = jnp.roll(inter_lo, -1)
+    child_inter_hi = jnp.roll(inter_hi, -1)
+    skip = (child_inter_lo == inter_lo) & (child_inter_hi == inter_hi)
+    skip = skip.at[logn].set(False)  # leaves have no child
+    return reachable & ~skip
+
+
+def decompose_range(L: int, R: int, logn: int):
+    """Classic segment-tree decomposition of [L, R] (inclusive).
+
+    Host-side helper for the BasicSearch ablation baseline: returns a list of
+    ``(lay, lo, hi)`` disjoint segments whose union is exactly [L, R]. At most
+    ``2 * logn`` segments.
+    """
+    out = []
+
+    def rec(lay, lo, hi):
+        if hi < L or lo > R:
+            return
+        if L <= lo and hi <= R:
+            out.append((lay, lo, hi))
+            return
+        mid = (lo + hi) // 2
+        rec(lay + 1, lo, mid)
+        rec(lay + 1, mid + 1, hi)
+
+    rec(0, 0, (1 << logn) - 1)
+    return out
+
+
+def covering_segment(L: int, R: int, logn: int):
+    """Smallest single segment covering [L, R] (SuperPostfiltering-style).
+
+    Returns ``(lay, lo, hi)``. This is the deepest tree node whose segment
+    contains the whole query range.
+    """
+    lay, lo, hi = 0, 0, (1 << logn) - 1
+    while lay < logn:
+        mid = (lo + hi) // 2
+        if R <= mid:
+            lay, hi = lay + 1, mid
+        elif L > mid:
+            lay, lo = lay + 1, mid + 1
+        else:
+            break
+    return lay, lo, hi

@@ -1,0 +1,119 @@
+"""Deterministic synthetic data pipelines.
+
+Two producers:
+
+  * ``TokenPipeline`` — an infinite, seeded LM token stream with Zipfian
+    unigram structure + repeated n-grams so tiny models have signal to
+    learn (loss actually decreases in the examples/tests). Batches come out
+    already ``device_put`` against the mesh's batch sharding when one is
+    supplied (the host->device path a real loader would use).
+
+  * ``vector_dataset`` — clustered Gaussian-mixture vectors + attributes
+    with controllable correlation, shaped like the paper's five datasets
+    (dims 128..2048). Used by every RFANN benchmark; seeds make each
+    benchmark table reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+__all__ = ["TokenPipeline", "vector_dataset", "PAPER_DATASETS"]
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    encdec_dim: int = 0       # >0: also emit frame embeddings (seamless stub)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        # Zipf-ish unigram distribution + a bank of n-grams to memorize
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        self._probs = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self._ngrams = self._rng.integers(
+            0, self.vocab, size=(64, 8)
+        ).astype(np.int32)
+
+    def next_batch(self, shardings=None):
+        toks = self._rng.choice(
+            self.vocab, size=(self.batch, self.seq + 1), p=self._probs
+        ).astype(np.int32)
+        # splice in memorizable n-grams
+        for b in range(self.batch):
+            for _ in range(max(1, self.seq // 64)):
+                g = self._ngrams[self._rng.integers(0, len(self._ngrams))]
+                pos = self._rng.integers(0, self.seq - len(g))
+                toks[b, pos : pos + len(g)] = g
+        batch = {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+        }
+        if self.encdec_dim:
+            batch["frames"] = self._rng.standard_normal(
+                (self.batch, self.seq, self.encdec_dim)
+            ).astype(np.float32)
+        if shardings is not None:
+            batch = {
+                k: jax.device_put(v, shardings[k]) for k, v in batch.items()
+            }
+        return batch
+
+
+# dataset name -> (dim, attr_kind) mirroring the paper's Table 1
+PAPER_DATASETS = {
+    "wit-like": (2048, "uniform"),        # image, image size attr
+    "tripclick-like": (768, "clustered"),  # text, publication date
+    "redcaps-like": (512, "clustered"),    # multimodal, timestamp
+    "ytrgb-like": (1024, "zipf"),          # video, # likes
+    "ytaudio-like": (128, "uniform"),      # audio, publish time
+}
+
+
+def vector_dataset(
+    n: int,
+    dim: int,
+    *,
+    seed: int = 0,
+    n_clusters: int = 64,
+    attr_kind: str = "uniform",
+    attr_vector_corr: float = 0.0,
+    n_attrs: int = 1,
+    queries: int = 0,
+):
+    """Returns (vectors[n, dim], attrs[n, n_attrs], query_vectors)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, dim)).astype(np.float32) * 2.0
+    assign = rng.integers(0, n_clusters, n)
+    vectors = centers[assign] + rng.standard_normal((n, dim)).astype(
+        np.float32
+    )
+    attrs = np.empty((n, n_attrs))
+    for a in range(n_attrs):
+        if attr_kind == "uniform":
+            base = rng.uniform(0, 1e6, n)
+        elif attr_kind == "clustered":
+            base = (assign * 1000 + rng.uniform(0, 1000, n))
+        elif attr_kind == "zipf":
+            base = rng.zipf(1.5, n).astype(np.float64)
+        else:
+            raise ValueError(attr_kind)
+        if attr_vector_corr > 0:
+            # attribute correlates with the first principal direction
+            proj = vectors @ centers[0] / np.linalg.norm(centers[0])
+            base = (1 - attr_vector_corr) * base + attr_vector_corr * (
+                (proj - proj.min()) / (np.ptp(proj) + 1e-9) * np.ptp(base)
+            )
+        attrs[:, a] = base
+    qv = None
+    if queries:
+        qa = rng.integers(0, n_clusters, queries)
+        qv = centers[qa] + rng.standard_normal((queries, dim)).astype(
+            np.float32
+        )
+    return vectors, attrs, qv

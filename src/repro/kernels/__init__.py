@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+kernels/<name>.py  — pl.pallas_call + BlockSpec
+kernels/ops.py     — jit'd wrappers with impl selection
+kernels/ref.py     — pure-jnp oracles
+
+Use ``from repro.kernels import ops`` and call ``ops.pairwise_dist`` /
+``ops.flash_attention`` (impl="auto" picks Pallas on TPU, XLA elsewhere).
+"""
+from repro.kernels import ops
+
+__all__ = ["ops"]

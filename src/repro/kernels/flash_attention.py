@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: blockwise (flash) attention for the LM backbones.
+
+Covers the variants the ten assigned architectures need:
+  * causal and bidirectional (seamless encoder)
+  * GQA/MQA — `Hq % Hkv == 0`, the kv head index is `h // group`
+  * sliding-window local attention (gemma2 alternating layers)
+  * logit softcap (gemma2)
+  * q_offset for chunked prefill (absolute positions of the q block)
+
+Layout: grid ``(B*Hq, Sq/bq, Skv/bk)``, reduction over key blocks innermost.
+Running (m, l, acc) live in VMEM scratch — the classic two-pass-free
+streaming softmax. Out-of-range key blocks (fully above the causal diagonal
+or fully outside the local window) are skipped with ``pl.when`` so the causal
+lower-left triangle costs ~half the FLOPs, and local attention is O(S*w).
+
+VMEM at defaults (bq=bk=128, Dh<=256, f32): q/k/v tiles 3*128*256*4 ≈ 0.4 MB,
+scores 128*128*4 = 64 KB, acc 128*256*4 = 128 KB — well inside budget; MXU
+dims are 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+_NEG = -1e30  # python float: jnp scalars would be captured consts in pallas
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+    scale, causal, window, softcap, bq, bk, nk, q_offset, sq_real, skv_real,
+):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos0 = iq * bq + q_offset
+    kpos0 = jk * bk
+
+    # block-level skip: entirely above the diagonal / outside the window
+    skip = jnp.bool_(False)
+    if causal:
+        skip |= kpos0 > qpos0 + bq - 1
+    if window is not None:
+        skip |= kpos0 + bk - 1 <= qpos0 - window
+
+    @pl.when(~skip)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale       # [bq, d]
+        k = k_ref[0].astype(jnp.float32)               # [bk, d]
+        v = v_ref[0].astype(jnp.float32)               # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # [bq, bk]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < skv_real
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]                            # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        correction = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * correction + jnp.sum(
+            p, axis=1, keepdims=True
+        )
+        acc_scr[...] = acc_scr[...] * correction + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "block_q", "block_k",
+        "interpret", "q_offset",
+    ),
+)
+def flash_attention_kernel_call(
+    q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+    q_offset=0, block_q=128, block_k=128, interpret=False,
+):
+    """q[B, Hq, Sq, Dh], k/v[B, Hkv, Skv, Dh] -> [B, Hq, Sq, Dh]."""
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+
+    def padto(a, mult, axis):
+        r = (-a.shape[axis]) % mult
+        if r == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(a, widths)
+
+    qp = padto(q.reshape(B * Hq, Sq, Dh), bq, 1)
+    kp = padto(k.reshape(B * Hkv, Skv, Dh), bk, 1)
+    vp = padto(v.reshape(B * Hkv, Skv, Dh), bk, 1)
+    Sqp, Skvp = qp.shape[1], kp.shape[1]
+    grid = (B * Hq, Sqp // bq, Skvp // bk)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=grid[2], q_offset=q_offset, sq_real=Sq,
+        skv_real=Skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda h, i, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda h, i, j, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sqp, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq, :].reshape(B, Hq, Sq, Dh)

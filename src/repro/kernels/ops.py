@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a TPU backend the Mosaic kernels run natively; everywhere else (this CPU
+container, tests) they run in ``interpret=True`` mode unless the caller asks
+for the pure-XLA reference instead. ``impl`` selection:
+
+  * "pallas"    — pallas_call, interpret on non-TPU backends
+  * "xla"       — ref.py jnp implementation (what the multi-pod dry-run
+                  lowers, since Mosaic cannot lower on the CPU host platform)
+  * "auto"      — pallas on TPU else xla
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import distance as _distance
+from repro.kernels import flash_attention as _flash
+from repro.kernels import ref as _ref
+
+__all__ = ["pairwise_dist", "flash_attention", "default_impl"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_dist(q, x, *, metric="l2", impl="auto", **block_kw):
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "xla":
+        return _ref.pairwise_dist(q, x, metric=metric)
+    return _distance.pairwise_dist_kernel_call(
+        q, x, metric=metric, interpret=_interpret(), **block_kw
+    )
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+    q_offset=0, impl="auto", unroll=1, **block_kw,
+):
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "xla":
+        return _ref.attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset, unroll=unroll,
+            **{k2: v2 for k2, v2 in block_kw.items() if k2 == "block_q"},
+        )
+    return _flash.flash_attention_kernel_call(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, interpret=_interpret(), **block_kw
+    )

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the semantic definition; kernels must match it to
+float tolerance across the shape/dtype sweeps in tests/test_kernels_*.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pairwise_dist", "attention"]
+
+
+def pairwise_dist(q, x, metric="l2"):
+    """q[Bq, D], x[N, D] -> [Bq, N].
+
+    l2: squared euclidean distance; ip: negative inner product.
+    """
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    dot = q @ x.T
+    if metric == "ip":
+        return -dot
+    qq = jnp.sum(q * q, axis=1, keepdims=True)
+    xx = jnp.sum(x * x, axis=1)
+    return qq - 2.0 * dot + xx[None, :]
+
+
+def attention(
+    q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+    q_offset=0, block_q=None, unroll=1,
+):
+    """Multi-head attention with GQA, optional local window and logit softcap.
+
+    q: [B, Hq, Sq, Dh]; k, v: [B, Hkv, Skv, Dh]; Hq % Hkv == 0.
+    window: if set, query i attends keys j with i - window < j (sliding).
+    softcap: gemma2-style ``cap * tanh(scores / cap)``.
+    q_offset: absolute position of q[..., 0, :] (for decode: Skv - Sq).
+    block_q: query-chunked (flash-style) evaluation: peak live memory is
+      O(block_q * Skv) instead of O(Sq * Skv). Auto-enabled on long
+      sequences; the tiny-shape path stays single-shot for exactness tests.
+    Returns [B, Hq, Sq, Dh] in q's dtype; math in f32.
+    """
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+    if block_q is None and Sq >= 2048:
+        block_q = 512
+    if block_q and Sq > block_q and Sq % block_q == 0:
+        nq = Sq // block_q
+        qs = jnp.moveaxis(
+            q.reshape(B, Hq, nq, block_q, Dh), 2, 0
+        )                                               # [nq, B, Hq, bq, Dh]
+        offs = q_offset + jnp.arange(nq) * block_q
+
+        @jax.checkpoint  # recompute chunk probs in backward: O(bq*Skv) live
+        def body(_, blk):
+            qb, off = blk
+            ob = _attn_chunk(qb, k, v, g, scale, causal, window, softcap,
+                             off, Skv)
+            return None, ob
+
+        _, outs = jax.lax.scan(body, None, (qs, offs), unroll=unroll)
+        out = jnp.moveaxis(outs, 0, 2).reshape(B, Hq, Sq, Dh)
+        return out.astype(q.dtype)
+    out = _attn_chunk(q, k, v, g, scale, causal, window, softcap,
+                      q_offset, Skv)
+    return out.astype(q.dtype)
+
+
+def _attn_chunk(q, k, v, g, scale, causal, window, softcap, q_offset, Skv):
+    """One query block against the full KV. q_offset may be traced."""
+    B, Hq, Sq, Dh = q.shape
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    # additive bias fuses into the softmax (no second S x S where-pass)
+    scores = scores + jnp.where(mask[None, None], 0.0, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores - m)
+    denom = jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs / denom, vf)

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) == 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) == 512 chips; the ``pod`` axis is an
+outer data-parallel axis (gradients cross DCI once per step; serving
+replicates indexes per pod and splits query streams).
+
+Defined as functions — importing this module never touches jax device
+state, so tests and benches see the single CPU device unless a launcher
+sets XLA_FLAGS first (see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_local_mesh", "batch_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices this host actually has."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

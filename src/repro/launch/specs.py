@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` produces weak-type-correct, shardable stand-ins
+for every model input — no device allocation — and ``input_shardings`` the
+matching NamedShardings for the production mesh. Decode caches get their
+shardings from leaf-path heuristics over the cache pytree (attn KV:
+[..., B, Hkv, S, Dh] — batch over (pod, data), heads over model, seq over
+data for the long-context sequence-parallel path; SSM/xLSTM states: batch +
+heads rules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import batch_axes
+from repro.models.api import Model
+
+__all__ = ["input_specs", "input_shardings", "cache_shardings"]
+
+
+def _div(n, size):
+    return size > 0 and n % size == 0
+
+
+def _axsize(mesh, axes):
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes if a in mesh.shape]))
+
+
+def _maybe(mesh, axes, dim):
+    """axes if dim divides the product of their sizes, else None."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    if _div(dim, _axsize(mesh, axes)):
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Returns a dict of ShapeDtypeStructs keyed like the step-fn kwargs."""
+    model = Model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": model.train_batch_specs(B, S)}
+    if shape.kind == "prefill":
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        inputs = {"tokens": tok}
+        if model.is_encdec:
+            inputs["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+            )
+        return {"inputs": inputs}
+    # decode: one new token against a cache of seq_len
+    seq_shard = shape.name == "long_500k"
+    cache = model.cache_specs(B, S, seq_shard=seq_shard)
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_shardings(cfg: ArchConfig, cache_spec, mesh: Mesh, batch: int,
+                    *, seq_shard: bool):
+    """NamedSharding tree for a decode cache via leaf-path heuristics."""
+    baxes = _maybe(mesh, batch_axes(mesh), batch)
+    seq_ax = "data" if seq_shard else None
+
+    def leaf(path, a):
+        names = [str(getattr(k, "key", "")) for k in path]
+        shape = a.shape
+        rank = len(shape)
+        spec = [None] * rank
+        # batch dim = first occurrence of the batch size past any layer-stack
+        # dims (stack dims come first and never equal the prod batch sizes)
+        bidx = next((i for i, s in enumerate(shape) if s == batch), None)
+        if bidx is None:
+            return NamedSharding(mesh, P(*spec))
+        spec[bidx] = baxes
+        is_kv = names and names[-1] in ("k", "v")
+        if is_kv and rank - bidx >= 4:          # [.., B, Hkv, S, Dh]
+            h_ax = _maybe(mesh, "model", shape[bidx + 1])
+            spec[bidx + 1] = h_ax
+            # sequence sharding: explicit for long-context cells, and as the
+            # fallback when GQA kv-heads cannot cover the model axis (the
+            # flash-decode pattern: partial scores + all-reduced softmax
+            # stats, instead of a replicated multi-GB cache)
+            cands = ([seq_ax] if seq_ax else []) + (
+                ["model"] if h_ax is None else []
+            )
+            for cand in cands:
+                ax = _maybe(mesh, cand, shape[bidx + 2])
+                if ax is not None:
+                    spec[bidx + 2] = ax
+                    break
+        elif rank - bidx >= 2:                   # states: heads/feature next
+            spec[bidx + 1] = _maybe(mesh, "model", shape[bidx + 1])
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_spec)
+
+
+def input_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    """Shardings congruent with input_specs(cfg, shape)."""
+    B = shape.global_batch
+    baxes = _maybe(mesh, batch_axes(mesh), B)
+    tok_sh = NamedSharding(mesh, P(baxes, None))
+    if shape.kind == "train":
+        model = Model(cfg)
+        sh = {"tokens": tok_sh, "targets": tok_sh}
+        if model.is_encdec:
+            sh["frames"] = NamedSharding(mesh, P(baxes, None, None))
+        return {"batch": sh}
+    if shape.kind == "prefill":
+        sh = {"tokens": tok_sh}
+        if Model(cfg).is_encdec:
+            sh["frames"] = NamedSharding(mesh, P(baxes, None, None))
+        return {"inputs": sh}
+    seq_shard = shape.name == "long_500k"
+    cache_spec = Model(cfg).cache_specs(B, shape.seq_len,
+                                        seq_shard=seq_shard)
+    return {
+        "token": tok_sh,
+        "cache": cache_shardings(cfg, cache_spec, mesh, B,
+                                 seq_shard=seq_shard),
+        "pos": NamedSharding(mesh, P()),
+    }

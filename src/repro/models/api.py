@@ -1,0 +1,122 @@
+"""Unified model API: one entry point per config regardless of family.
+
+    model = Model(cfg)
+    params = model.init(key)            # or model.abstract() for dry-run
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, **inputs)
+    logits, cache = model.decode(params, token, cache, pos)
+    emb = model.embed(params, tokens)   # mean-pooled hidden (RFANN producer)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+from repro.sharding import partitioning as part
+
+__all__ = ["Model", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.cfg.family == "encdec"
+
+    # -- params ------------------------------------------------------------
+    def defs(self):
+        mod = encdec if self.is_encdec else transformer
+        return mod.defs(self.cfg)
+
+    def init(self, key):
+        return part.init_params(
+            self.defs(), key, jnp.dtype(self.cfg.param_dtype)
+        )
+
+    def abstract(self):
+        return part.abstract_params(
+            self.defs(), jnp.dtype(self.cfg.param_dtype)
+        )
+
+    def param_specs(self, mesh):
+        return part.param_specs(self.defs(), mesh)
+
+    def param_shardings(self, mesh):
+        return part.named_shardings(self.defs(), mesh)
+
+    # -- compute -----------------------------------------------------------
+    def loss(self, params, batch):
+        mod = encdec if self.is_encdec else transformer
+        return mod.loss_fn(params, self.cfg, batch)
+
+    def prefill(self, params, **inputs):
+        if self.is_encdec:
+            return encdec.prefill(
+                params, self.cfg, inputs["frames"], inputs["tokens"]
+            )
+        return transformer.prefill(params, self.cfg, inputs["tokens"])
+
+    def decode(self, params, token, cache, pos):
+        mod = encdec if self.is_encdec else transformer
+        return mod.decode_step(params, self.cfg, token, cache, pos)
+
+    def init_cache(self, batch, max_len, *, seq_shard=False):
+        if self.is_encdec:
+            return encdec.init_cache(
+                self.cfg, batch, max_len, seq_shard=seq_shard
+            )
+        return transformer.init_cache(
+            self.cfg, batch, max_len, seq_shard=seq_shard
+        )
+
+    def embed(self, params, tokens):
+        """Mean-pooled final hidden state — the RFANN vector producer."""
+        hidden, _, _ = transformer.forward_seq(params, self.cfg, tokens)
+        return jnp.mean(hidden.astype(jnp.float32), axis=1)
+
+    # -- batch shapes (ShapeDtypeStruct; no allocation) ----------------------
+    def train_batch_specs(self, batch, seq):
+        cfg = self.cfg
+        tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        if self.is_encdec:
+            frames = jax.ShapeDtypeStruct(
+                (batch, seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+            )
+            return {"frames": frames, "tokens": tok, "targets": tok}
+        return {"tokens": tok, "targets": tok}
+
+    def cache_specs(self, batch, max_len, *, seq_shard=False):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len, seq_shard=seq_shard)
+        )
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Parameter count from the ParamDef tree (no allocation).
+
+    active_only: MoE experts counted at top_k/n_experts utilization
+    (MODEL_FLOPS = 6 * N_active * D in the roofline).
+    """
+    model = Model(cfg)
+    total = 0
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(
+        model.defs(), is_leaf=lambda x: isinstance(x, part.ParamDef)
+    )[0]
+    for path, d in leaves_with_path:
+        n = int(np.prod(d.shape))
+        is_expert = "expert" in d.axes
+        if active_only and is_expert and cfg.n_experts:
+            n = int(n * cfg.expert_top_k / cfg.n_experts)
+        # padded vocab rows are not "real" params for accounting
+        if "vocab" in d.axes and cfg.padded_vocab != cfg.vocab:
+            n = int(n * cfg.vocab / cfg.padded_vocab)
+        total += n
+    return total

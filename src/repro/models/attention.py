@@ -1,0 +1,146 @@
+"""GQA attention sublayer: RoPE, qk-norm, local windows, softcap, KV cache.
+
+Decode keeps the KV cache in ``[B, Hkv, Smax, Dh]`` layout (heads-major so
+the model-axis sharding of ``Hkv`` never moves between steps — a layout
+chosen in the §Perf iterations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.sharding.partitioning import ParamDef, constrain
+
+__all__ = ["attn_defs", "attention", "init_kv_cache", "decode_attention"]
+
+
+def attn_defs(cfg, *, cross=False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    defs = {
+        "wq": ParamDef((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((hq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = L.rms_norm_def(hd)
+        defs["k_norm"] = L.rms_norm_def(hd)
+    return defs
+
+
+def _project_qkv(p, cfg, x, positions, *, rope_on=True):
+    ct = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(ct))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(ct))
+    if cfg.qk_norm:
+        q = L.rms_norm(p["q_norm"], q)
+        k = L.rms_norm(p["k_norm"], k)
+    if rope_on:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    # [B, H, S, Dh]
+    q = constrain(q.transpose(0, 2, 1, 3), "batch", "act_heads", "seq", None)
+    k = constrain(k.transpose(0, 2, 1, 3), "batch", "act_heads", "seq", None)
+    v = constrain(v.transpose(0, 2, 1, 3), "batch", "act_heads", "seq", None)
+    return q, k, v
+
+
+def attention(p, cfg, x, positions, *, window=None, causal=True,
+              kv=None):
+    """Full-sequence attention (train / prefill).
+
+    kv: optional precomputed (k, v) for cross-attention (seamless decoder).
+    Returns (out[B, S, d], (k, v)) so prefill can seed the cache.
+    """
+    if kv is None:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    else:
+        ct = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(ct))
+        if cfg.qk_norm:
+            q = L.rms_norm(p["q_norm"], q)
+        q = q.transpose(0, 2, 1, 3)
+        k, v = kv
+    out = kops.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+        impl=cfg.attention_impl, unroll=True if cfg.scan_unroll else 1,
+    )
+    out = out.transpose(0, 2, 1, 3)  # [B, S, H, Dh]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return constrain(out, "batch", "seq", "act_embed"), (k, v)
+
+
+def cross_kv(p, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    ct = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(ct))
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def init_kv_cache(cfg, batch, max_len, dtype, *, seq_shard=False):
+    """Empty per-layer KV cache [B, Hkv, Smax, Dh] x2."""
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.hd)
+    k = jnp.zeros(shape, dtype)
+    v = jnp.zeros(shape, dtype)
+    seq_ax = "seq_shard" if seq_shard else None
+    k = constrain(k, "batch", "act_heads", seq_ax, None)
+    v = constrain(v, "batch", "act_heads", seq_ax, None)
+    return {"k": k, "v": v}
+
+
+def decode_attention(p, cfg, x, cache, pos, *, window=None, update=True):
+    """One-token decode against the KV cache.
+
+    x: [B, 1, d]; pos: scalar int32 (current absolute position).
+    Returns (out[B, 1, d], new_cache).
+    """
+    ct = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(ct))
+    if update:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(ct))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(ct))
+    if cfg.qk_norm:
+        q = L.rms_norm(p["q_norm"], q)
+        if update:
+            k_new = L.rms_norm(p["k_norm"], k_new)
+    posv = jnp.full((1,), pos, jnp.int32)
+    if update:  # self-attention decode (cross-attention skips rope)
+        q = L.rope(q, posv, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)                       # [B, H, 1, Dh]
+    if update:
+        k_new = L.rope(k_new, posv, cfg.rope_theta).transpose(0, 2, 1, 3)
+        v_new = v_new.transpose(0, 2, 1, 3)
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=2)
+        cache = {"k": k, "v": v}
+    else:  # cross-attention: cache is static
+        k, v = cache["k"], cache["v"]
+
+    # masked softmax over the cache (XLA path: decode is a matvec; the
+    # Pallas flash kernel targets the prefill/train shapes)
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    qf = q.astype(jnp.float32) * (cfg.hd ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(q.shape[0], hkv, g, cfg.hd)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, kf)
+    s = L.softcap(s, cfg.attn_softcap)
+    kpos = jnp.arange(k.shape[2])
+    mask = kpos[None, :] <= pos if update else jnp.ones(
+        (1, k.shape[2]), bool
+    )
+    if window is not None:
+        mask = mask & (kpos[None, :] > pos - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, vf)
+    out = out.reshape(q.shape[0], hq, 1, cfg.hd).transpose(0, 2, 1, 3)
+    out = jnp.einsum(
+        "bshk,hkd->bsd", out.astype(ct), p["wo"].astype(ct)
+    )
+    return constrain(out, "batch", "seq", "act_embed"), cache

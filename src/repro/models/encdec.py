@@ -1,0 +1,168 @@
+"""Encoder–decoder assembly (seamless-m4t backbone).
+
+The modality frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings [B, S_enc, d]. The decoder is a causal stack
+with cross-attention over encoder output; decode caches both the self-KV
+(updated each step) and the static cross-KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mlp as mlp_mod
+from repro.models.transformer import _remat, _stack_defs, _unroll
+from repro.sharding.partitioning import ParamDef
+
+__all__ = [
+    "defs", "loss_fn", "encode", "prefill", "decode_step", "init_cache",
+]
+
+
+def _enc_block_defs(cfg):
+    return {
+        "norm1": L.rms_norm_def(cfg.d_model),
+        "attn": attn_mod.attn_defs(cfg),
+        "norm2": L.rms_norm_def(cfg.d_model),
+        "ffn": mlp_mod.mlp_defs(cfg),
+    }
+
+
+def _dec_block_defs(cfg):
+    return {
+        "norm1": L.rms_norm_def(cfg.d_model),
+        "self_attn": attn_mod.attn_defs(cfg),
+        "norm_x": L.rms_norm_def(cfg.d_model),
+        "cross_attn": attn_mod.attn_defs(cfg, cross=True),
+        "norm2": L.rms_norm_def(cfg.d_model),
+        "ffn": mlp_mod.mlp_defs(cfg),
+    }
+
+
+def defs(cfg):
+    d = cfg.d_model
+    return {
+        "embed": L.embed_def(cfg.padded_vocab, d),
+        "enc_in": ParamDef((d, d), ("embed", None)),  # frame-embedding adapter
+        "enc_blocks": _stack_defs(_enc_block_defs(cfg), cfg.enc_layers),
+        "enc_norm": L.rms_norm_def(d),
+        "dec_blocks": _stack_defs(_dec_block_defs(cfg), cfg.n_layers),
+        "final_norm": L.rms_norm_def(d),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames[B, S_enc, d_model] (stub frontend output) -> enc hidden."""
+    ct = jnp.dtype(cfg.compute_dtype)
+    x = jnp.einsum("bsd,de->bse", frames.astype(ct),
+                   params["enc_in"].astype(ct))
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, bp):
+        def inner(bp, x):
+            h = L.rms_norm(bp["norm1"], x)
+            mix, _ = attn_mod.attention(bp["attn"], cfg, h, positions,
+                                        causal=False)
+            x = x + mix
+            h2 = L.rms_norm(bp["norm2"], x)
+            return x + mlp_mod.mlp(bp["ffn"], cfg, h2)
+
+        return _remat(inner, cfg)(bp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=_unroll(cfg))
+    return L.rms_norm(params["enc_norm"], x)
+
+
+def _dec_block_seq(bp, cfg, x, positions, enc_out):
+    h = L.rms_norm(bp["norm1"], x)
+    mix, (k, v) = attn_mod.attention(bp["self_attn"], cfg, h, positions,
+                                     causal=True)
+    x = x + mix
+    hx = L.rms_norm(bp["norm_x"], x)
+    ck, cv = attn_mod.cross_kv(bp["cross_attn"], cfg, enc_out)
+    cx, _ = attn_mod.attention(
+        bp["cross_attn"], cfg, hx, positions, causal=False, kv=(ck, cv)
+    )
+    x = x + cx
+    h2 = L.rms_norm(bp["norm2"], x)
+    x = x + mlp_mod.mlp(bp["ffn"], cfg, h2)
+    return x, {"k": k, "v": v}, {"k": ck, "v": cv}
+
+
+def decode_seq(params, cfg, tokens, enc_out, *, collect_cache=False):
+    ct = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens, ct)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, bp):
+        def inner(bp, x):
+            return _dec_block_seq(bp, cfg, x, positions, enc_out)
+
+        x, sc, cc = _remat(inner, cfg)(bp, x)
+        return x, ((sc, cc) if collect_cache else None)
+
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"], unroll=_unroll(cfg))
+    x = L.rms_norm(params["final_norm"], x)
+    return x, caches
+
+
+def loss_fn(params, cfg, batch):
+    """batch: frames[B, S_enc, d], tokens[B, S_dec], targets[B, S_dec]."""
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden, _ = decode_seq(params, cfg, batch["tokens"], enc_out)
+    loss = L.chunked_cross_entropy(
+        params["embed"]["table"], hidden, batch["targets"], cfg
+    )
+    return loss, {"nll": loss, "aux": jnp.float32(0.0)}
+
+
+def prefill(params, cfg, frames, tokens):
+    enc_out = encode(params, cfg, frames)
+    hidden, caches = decode_seq(params, cfg, tokens, enc_out,
+                                collect_cache=True)
+    logits = L.logits(params["embed"], None, hidden[:, -1:, :], cfg)
+    return logits[:, 0], caches
+
+
+def init_cache(cfg, batch, max_len, enc_len=None, *, seq_shard=False):
+    ct = jnp.dtype(cfg.compute_dtype)
+    enc_len = enc_len or max_len
+    self_kv = attn_mod.init_kv_cache(cfg, batch, max_len, ct,
+                                     seq_shard=seq_shard)
+    cross_kv_c = attn_mod.init_kv_cache(cfg, batch, enc_len, ct,
+                                        seq_shard=seq_shard)
+    st = lambda c: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), c
+    )
+    return {"self": st(self_kv), "cross": st(cross_kv_c)}
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """One decoder token; cross-KV is static, self-KV updates."""
+    ct = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], token, ct)
+
+    def body(x, scanned):
+        bp, sc, cc = scanned
+        h = L.rms_norm(bp["norm1"], x)
+        mix, sc2 = attn_mod.decode_attention(bp["self_attn"], cfg, h, sc,
+                                             pos)
+        x = x + mix
+        hx = L.rms_norm(bp["norm_x"], x)
+        cx, _ = attn_mod.decode_attention(
+            bp["cross_attn"], cfg, hx, cc, pos, update=False
+        )
+        x = x + cx
+        h2 = L.rms_norm(bp["norm2"], x)
+        x = x + mlp_mod.mlp(bp["ffn"], cfg, h2)
+        return x, sc2
+
+    x, self_new = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"], cache["cross"]),
+        unroll=_unroll(cfg),
+    )
+    x = L.rms_norm(params["final_norm"], x)
+    logits = L.logits(params["embed"], None, x, cfg)
+    return logits, {"self": self_new, "cross": cache["cross"]}

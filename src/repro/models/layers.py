@@ -1,0 +1,147 @@
+"""Shared model layers: norms, RoPE, embeddings, logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partitioning import ParamDef, constrain
+
+__all__ = [
+    "rms_norm", "rms_norm_def", "rope", "embed_def", "embed_lookup",
+    "logits", "softcap",
+]
+
+
+def rms_norm_def(d):
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rms_norm(p, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope(x, positions, theta=10000.0):
+    """x[B, S, H, Dh] or [B, S, Dh], rotated by absolute positions[S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs      # [S, half]
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    if x.ndim == 4:   # [B, S, H, Dh]
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:             # [B, S, Dh]
+        cos = cos[None]
+        sin = sin[None]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def embed_def(vocab, d):
+    return {"table": ParamDef((vocab, d), ("vocab", "embed"))}
+
+
+def embed_lookup(p, tokens, compute_dtype):
+    out = p["table"].astype(compute_dtype)[tokens]
+    return constrain(out, "batch", "seq", "act_embed")
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def chunked_cross_entropy(w, hidden, targets, cfg, *, chunk=512):
+    """CE fused with the output projection, scanned over sequence chunks —
+    the full [B, S, V] logits tensor is never materialized (the dominant
+    activation on big-vocab archs; see EXPERIMENTS.md §Perf).
+
+    w: [padded_vocab, d] projection (tied embedding or head weight).
+    """
+    B, S, d = hidden.shape
+    ct = hidden.dtype
+    Sc = min(chunk, S)
+    if S % Sc:
+        return cross_entropy(
+            softcap(jnp.einsum("bsd,vd->bsv", hidden, w.astype(ct)),
+                    cfg.logit_softcap),
+            targets, cfg.vocab, cfg.padded_vocab,
+        )
+    nc = S // Sc
+    xs = jnp.moveaxis(hidden.reshape(B, nc, Sc, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, nc, Sc), 1, 0)
+
+    @jax.checkpoint  # recompute chunk logits in backward: O(Sc*V) live
+    def body(carry, blk):
+        tot, cnt = carry
+        xb, tb = blk
+        logits = jnp.einsum("bsd,vd->bsv", xb, w.astype(ct))
+        logits = softcap(logits, cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab:
+            pad = (jnp.arange(cfg.padded_vocab) >= cfg.vocab).astype(ct)
+            logits = logits - pad[None, None, :] * jnp.asarray(1e30, ct)
+        m = jnp.max(logits, axis=-1).astype(jnp.float32)
+        ex = jnp.exp(logits - m[..., None].astype(ct))
+        s = jnp.sum(ex, axis=-1, dtype=jnp.float32)
+        logz = m + jnp.log(s)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(tb, 0)[..., None], axis=-1
+        )[..., 0].astype(jnp.float32)
+        mask = (tb >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((logz - gold) * mask),
+                cnt + jnp.sum(mask)), None
+
+    unroll = True if cfg.scan_unroll else 1
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ts), unroll=unroll
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def cross_entropy(logits, targets, vocab, padded_vocab):
+    """Masked next-token CE without materializing f32 full-vocab buffers.
+
+    ``logits`` stay in compute dtype (bf16 on the prod path); the max and
+    the exp-sum reductions accumulate in f32 (MaxText-style). Entries of the
+    padded vocab tail are excluded by a -1e30 bias (bf16 exponent range
+    covers it). targets == -1 are ignored.
+    """
+    if padded_vocab != vocab:
+        pad = (jnp.arange(padded_vocab) >= vocab).astype(logits.dtype)
+        logits = logits - pad[None, None, :] * jnp.asarray(
+            1e30, logits.dtype
+        )
+    m = jnp.max(logits, axis=-1).astype(jnp.float32)
+    ex = jnp.exp(logits - m[..., None].astype(logits.dtype))
+    s = jnp.sum(ex, axis=-1, dtype=jnp.float32)
+    logz = m + jnp.log(s)
+    tgt = jnp.maximum(targets, 0)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[
+        ..., 0
+    ].astype(jnp.float32)
+    nll = logz - gold
+    mask = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def logits(embed_p, head_p, x, cfg):
+    """Project to (padded) vocab; ties to embedding when cfg.tie_embeddings."""
+    if cfg.tie_embeddings:
+        w = embed_p["table"]
+    else:
+        w = head_p["w"]
+    out = jnp.einsum(
+        "...d,vd->...v", x, w.astype(x.dtype)
+    )
+    out = softcap(out, cfg.logit_softcap)
+    out = constrain(out, "batch", "seq", "act_vocab")
+    return out

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) mixer — chunked parallel training form + O(1) decode step.
+
+The state-space recurrence per head h with scalar decay ``a_t`` and input/
+output projections B_t, C_t (state dim N, head dim P):
+
+    H_t = a_t * H_{t-1} + B_t x_t^T          H in R^{N x P}
+    y_t = C_t^T H_t
+
+Training uses the SSD block decomposition (Mamba2 paper §6): within-chunk
+quadratic term + between-chunk state scan, so the materialized state tensor
+is only [B, n_chunks, heads, N, P]. Decode keeps (conv_state, ssm_state) and
+advances in O(1) per token — this is what makes ``long_500k`` a runnable
+cell for the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partitioning import ParamDef, constrain
+
+__all__ = [
+    "mamba_defs", "mamba_seq", "mamba_decode_step", "init_mamba_cache",
+]
+
+_CONV_K = 4
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    d_inner, H, N, P = _dims(cfg)
+    conv_dim = d_inner + 2 * N  # x, B, C go through the causal conv
+    return {
+        "w_in": ParamDef(
+            (d, 2 * d_inner + 2 * N + H), ("embed", "mlp")
+        ),  # [z, x, B, C, dt]
+        "conv_w": ParamDef((_CONV_K, conv_dim), ("conv", "mlp")),
+        "conv_b": ParamDef((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "norm": {"scale": ParamDef((d_inner,), ("mlp",), init="ones")},
+        "w_out": ParamDef((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(p, cfg, x):
+    d_inner, H, N, P = _dims(cfg)
+    ct = x.dtype
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(ct))
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1,
+    )
+    return z, xin, Bc, Cc, dt
+
+
+def _gated_norm(p, x, z, eps=1e-6):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mamba_seq(p, cfg, x):
+    """Full-sequence (train / prefill) forward.
+
+    x[B, S, d] -> ([B, S, d], final_state) — final_state seeds decode.
+    """
+    B, S, d = x.shape
+    d_inner, H, N, P = _dims(cfg)
+    Lc = min(cfg.ssm_chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+    ct = x.dtype
+
+    z, xin, Bc, Cc, dt = _split_proj(p, cfg, x)
+    # causal depthwise conv over (x, B, C)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv = jnp.pad(conv_in, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    win = jnp.stack(
+        [conv[:, i : i + S] for i in range(_CONV_K)], axis=-1
+    )  # [B, S, conv_dim, K]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bsck,kc->bsc", win, p["conv_w"].astype(ct))
+        + p["conv_b"].astype(ct)
+    )
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                   # [B, S, H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # [H]
+    la = dt * a[None, None, :]                          # log decay, <= 0
+
+    xh = xin.reshape(B, S, H, P).astype(jnp.float32)
+    xh = xh * dt[..., None]                             # fold dt into input
+    Bf = Bc.astype(jnp.float32)                         # [B, S, N] (shared)
+    Cf = Cc.astype(jnp.float32)
+
+    # --- chunked SSD ---
+    lac = la.reshape(B, nc, Lc, H)
+    cum = jnp.cumsum(lac, axis=2)                       # within-chunk cumsum
+    total = cum[:, :, -1, :]                            # [B, nc, H]
+    xc = xh.reshape(B, nc, Lc, H, P)
+    Bcc = Bf.reshape(B, nc, Lc, N)
+    Ccc = Cf.reshape(B, nc, Lc, N)
+
+    # within-chunk (quadratic in Lc): y_intra[t] = sum_{s<=t} decay * (C_t.B_s) x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,t,s,H]
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Ccc, Bcc)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", cb, decay, xc)
+
+    # chunk states: S_c = sum_s exp(total - cum_s) B_s x_s^T  [B,nc,H,N,P]
+    sdecay = jnp.exp(total[:, :, None, :] - cum)        # [B,nc,Lc,H]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bcc, sdecay, xc)
+
+    # inter-chunk scan: H_c = exp(total_c) H_{c-1} + S_c (associative)
+    def comb(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 + a2, s1 * jnp.exp(a2)[..., None, None] + s2
+
+    totals_t = jnp.moveaxis(total, 1, 0)                # [nc, B, H]
+    states_t = jnp.moveaxis(states, 1, 0)               # [nc, B, H, N, P]
+    _, hstates = jax.lax.associative_scan(comb, (totals_t, states_t))
+    # state entering chunk c is hstates[c-1]
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(hstates[:1]), hstates[:-1]], axis=0
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                 # [B, nc, H, N, P]
+
+    # inter-chunk contribution: y_inter[t] = exp(cum_t) C_t . H_prev
+    y_inter = jnp.einsum(
+        "bctn,bcth,bchnp->bcthp", Ccc, jnp.exp(cum), h_prev
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(ct)
+
+    y = _gated_norm(p["norm"], y, z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(ct))
+    state = {
+        "conv": conv_in[:, S - (_CONV_K - 1):, :],
+        "ssm": jnp.moveaxis(hstates, 0, 1)[:, -1],  # [B, H, N, P]
+    }
+    return constrain(out, "batch", "seq", "act_embed"), state
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    d_inner, H, N, P = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, _CONV_K - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, cfg, x, cache):
+    """x[B, 1, d] -> ([B, 1, d], new_cache). O(1) per token."""
+    B = x.shape[0]
+    d_inner, H, N, P = _dims(cfg)
+    ct = x.dtype
+    z, xin, Bc, Cc, dt = _split_proj(p, cfg, x)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)   # [B, 1, conv_dim]
+    win = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B, K, cd]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(ct))
+        + p["conv_b"].astype(ct)
+    )
+    new_conv = win[:, 1:]
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dtv = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                   # [B, H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dtv * a[None, :])                   # [B, H]
+    xh = xin.reshape(B, H, P).astype(jnp.float32) * dtv[..., None]
+    Bf = Bc.astype(jnp.float32)                         # [B, N]
+    Cf = Cc.astype(jnp.float32)
+    h = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bf, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cf, h)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(ct)
+    y = _gated_norm(p["norm"], y, z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(ct))
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,124 @@
+"""Dense feed-forward sublayers (SwiGLU / GELU) and the MoE variant.
+
+MoE uses sort-based grouped dispatch (DESIGN.md): tokens are routed top-k,
+sorted by expert, gathered into a capacity-bounded ``[E, C, d]`` tensor that
+shards its expert dim over the ``model`` axis (expert parallelism), run
+through stacked expert weights, and combined with router weights. Dropped
+tokens (over capacity) fall back to a zero contribution, standard for
+capacity-factor routing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partitioning import ParamDef, constrain
+
+__all__ = ["mlp_defs", "mlp", "moe_defs", "moe"]
+
+
+def mlp_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "mlp")),
+            "w_up": ParamDef((d, f), ("embed", "mlp")),
+            "w_down": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamDef((d, f), ("embed", "mlp")),
+        "w_down": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, cfg, x):
+    ct = x.dtype
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(ct))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(ct))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(ct))
+        )
+    h = constrain(h, "batch", "seq", "act_mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(ct))
+    return constrain(out, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_defs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, e), ("embed", None)),
+        "w_gate": ParamDef((e, d, f), ("expert", "embed", "mlp")),
+        "w_up": ParamDef((e, d, f), ("expert", "embed", "mlp")),
+        "w_down": ParamDef((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def moe(p, cfg, x):
+    """x[B, S, d] -> [B, S, d] with top-k expert routing.
+
+    Returns (out, aux_loss) — aux is the switch-style load-balancing loss.
+    """
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.expert_top_k
+    ct = x.dtype
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)          # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch):  e * sum_e(frac_tokens * frac_prob)
+    frac_prob = probs.mean(0)
+    frac_tok = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0
+    ) / (T * k)
+    aux = e * jnp.sum(frac_prob * frac_tok)
+
+    # sort the T*k assignments by expert
+    flat_e = top_e.reshape(-1)                       # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+
+    # position of each assignment within its expert group
+    C = int((T * k / e) * cfg.moe_capacity_factor) + 1
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    pos = jnp.arange(T * k) - starts[se]
+    keep = pos < C
+
+    # gather tokens into [E, C, d] (dropped -> slot C-1 overwritten later is
+    # avoided by scattering with a mask)
+    slot = jnp.where(keep, se * C + pos, e * C)      # spill to a trash slot
+    disp = jnp.zeros((e * C + 1, d), ct).at[slot].set(xt[st].astype(ct))
+    disp = disp[: e * C].reshape(e, C, d)
+    disp = constrain(disp, "act_expert", None, None)
+
+    h_g = jnp.einsum("ecd,edf->ecf", disp, p["w_gate"].astype(ct))
+    h_u = jnp.einsum("ecd,edf->ecf", disp, p["w_up"].astype(ct))
+    h = jax.nn.silu(h_g) * h_u
+    h = constrain(h, "act_expert", None, "act_mlp")
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(ct))
+    eo = constrain(eo, "act_expert", None, None).reshape(e * C, d)
+
+    # combine back: each kept assignment adds w * expert_out to its token
+    gath = jnp.where(keep[:, None], eo[jnp.clip(se * C + pos, 0, e * C - 1)],
+                     0.0)
+    out = jnp.zeros((T, d), ct).at[st].add(
+        gath * sw[:, None].astype(ct)
+    )
+    out = out.reshape(B, S, d)
+    return constrain(out, "batch", "seq", "act_embed"), aux

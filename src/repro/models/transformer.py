@@ -1,0 +1,485 @@
+"""Decoder-only model assembly for every assigned family.
+
+One block skeleton with a pluggable mixer (attention / mamba2 / mLSTM /
+sLSTM) + FFN (dense / MoE / none). Uniform stacks are scanned
+(``lax.scan`` over stacked params — one compiled block body regardless of
+depth, which keeps the 512-device dry-run compile tractable); heterogeneous
+stacks (gemma2 local/global pairs, zamba2 shared-attention groups, xlstm
+mixed blocks) get family-specific assembly below.
+
+Public surface (used by train/serve/launch):
+  defs(cfg)                      — ParamDef tree
+  forward_seq(params, cfg, tok)  — hidden states + per-layer caches (+aux)
+  loss_fn / prefill / decode_step
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mamba2 as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import xlstm as xlstm_mod
+from repro.sharding.partitioning import ParamDef, constrain
+
+__all__ = [
+    "defs", "loss_fn", "prefill", "decode_step", "init_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# layer-kind layout per family
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg):
+    if cfg.layer_pattern == "local_global":
+        return ["attn_local" if i % 2 == 0 else "attn"
+                for i in range(cfg.n_layers)]
+    if cfg.layer_pattern == "xlstm":
+        return ["slstm" if i in cfg.slstm_layers else "mlstm"
+                for i in range(cfg.n_layers)]
+    if cfg.layer_pattern == "hybrid_shared_attn":
+        return ["mamba"] * cfg.n_layers  # shared attn handled separately
+    if cfg.layer_pattern == "ssm":
+        return ["mamba"] * cfg.n_layers
+    return ["attn"] * cfg.n_layers
+
+
+def _mixer_defs(cfg, kind):
+    if kind.startswith("attn"):
+        return attn_mod.attn_defs(cfg)
+    if kind == "mamba":
+        return mamba_mod.mamba_defs(cfg)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_defs(cfg)
+    if kind == "slstm":
+        return xlstm_mod.slstm_defs(cfg)
+    raise ValueError(kind)
+
+
+def _has_ffn(cfg, kind):
+    if kind in ("mlstm", "slstm"):
+        return False  # xlstm blocks carry their own projections
+    if cfg.layer_pattern == "hybrid_shared_attn" and kind == "mamba":
+        return False  # zamba2: only the shared attention block has an MLP
+    return cfg.d_ff > 0 or cfg.n_experts > 0
+
+
+def block_defs(cfg, kind):
+    d = cfg.d_model
+    out = {"norm1": L.rms_norm_def(d), "mixer": _mixer_defs(cfg, kind)}
+    if cfg.sandwich_norm:
+        out["norm1b"] = L.rms_norm_def(d)
+    if _has_ffn(cfg, kind):
+        out["norm2"] = L.rms_norm_def(d)
+        if cfg.n_experts > 0:
+            out["ffn"] = mlp_mod.moe_defs(cfg)
+        else:
+            out["ffn"] = mlp_mod.mlp_defs(cfg)
+        if cfg.sandwich_norm:
+            out["norm2b"] = L.rms_norm_def(d)
+    return out
+
+
+def _stack_defs(defs, n):
+    """Prepend a ("layers",) stacking dim to every ParamDef."""
+    return jax.tree.map(
+        lambda p: ParamDef((n,) + p.shape, ("layers",) + p.axes,
+                           init=p.init, scale=p.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def defs(cfg):
+    kinds = layer_kinds(cfg)
+    d = cfg.d_model
+    out = {
+        "embed": L.embed_def(cfg.padded_vocab, d),
+        "final_norm": L.rms_norm_def(d),
+    }
+    if not cfg.tie_embeddings:
+        out["head"] = {
+            "w": ParamDef((cfg.padded_vocab, d), ("vocab", "embed"))
+        }
+    if cfg.layer_pattern == "hybrid_shared_attn":
+        out["blocks"] = _stack_defs(block_defs(cfg, "mamba"), cfg.n_layers)
+        out["shared_attn"] = block_defs(cfg, "attn")
+        return out
+    if cfg.layer_pattern == "local_global":
+        assert cfg.n_layers % 2 == 0
+        out["blocks"] = _stack_defs(
+            {"a": block_defs(cfg, "attn_local"), "b": block_defs(cfg, "attn")},
+            cfg.n_layers // 2,
+        )
+        return out
+    if cfg.layer_pattern == "xlstm":
+        # periodic (mLSTM, mLSTM, mLSTM, sLSTM) groups -> scannable stack
+        assert cfg.n_layers % 4 == 0, "xlstm stack uses groups of 4"
+        assert tuple(cfg.slstm_layers) == tuple(
+            range(3, cfg.n_layers, 4)
+        ), "slstm blocks sit at positions 3 mod 4"
+        out["blocks"] = _stack_defs(
+            {"m0": block_defs(cfg, "mlstm"),
+             "m1": block_defs(cfg, "mlstm"),
+             "m2": block_defs(cfg, "mlstm"),
+             "s": block_defs(cfg, "slstm")},
+            cfg.n_layers // 4,
+        )
+        return out
+    out["blocks"] = _stack_defs(block_defs(cfg, kinds[0]), cfg.n_layers)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _mixer_seq(bp, cfg, kind, h, positions):
+    """Returns (mix_out, cache_seed). cache_seed is the prefill KV/state."""
+    if kind.startswith("attn"):
+        window = cfg.local_window if kind == "attn_local" else None
+        out, (k, v) = attn_mod.attention(
+            bp, cfg, h, positions, window=window, causal=True
+        )
+        return out, {"k": k, "v": v}
+    if kind == "mamba":
+        return mamba_mod.mamba_seq(bp, cfg, h)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_seq(bp, cfg, h)
+    if kind == "slstm":
+        return xlstm_mod.slstm_seq(bp, cfg, h)
+    raise ValueError(kind)
+
+
+def block_seq(bp, cfg, kind, x, positions):
+    h = L.rms_norm(bp["norm1"], x)
+    mix, cache = _mixer_seq(bp["mixer"], cfg, kind, h, positions)
+    if cfg.sandwich_norm:
+        mix = L.rms_norm(bp["norm1b"], mix)
+    x = x + mix
+    aux = jnp.float32(0.0)
+    if _has_ffn(cfg, kind):
+        h2 = L.rms_norm(bp["norm2"], x)
+        if cfg.n_experts > 0:
+            f, aux = mlp_mod.moe(bp["ffn"], cfg, h2)
+        else:
+            f = mlp_mod.mlp(bp["ffn"], cfg, h2)
+        if cfg.sandwich_norm:
+            f = L.rms_norm(bp["norm2b"], f)
+        x = x + f
+    return x, cache, aux
+
+
+def _split_hybrid(cfg, blocks):
+    """Split the stacked [L, ...] mamba params into [G, period, ...] full
+    groups + an [rem, ...] tail."""
+    period = cfg.shared_attn_period
+    G = cfg.n_layers // period
+    rem = cfg.n_layers - G * period
+    g = jax.tree.map(
+        lambda a: a[: G * period].reshape((G, period) + a.shape[1:]), blocks
+    )
+    r = jax.tree.map(lambda a: a[G * period:], blocks)
+    return g, r, G, rem
+
+
+def _unroll(cfg):
+    return True if cfg.scan_unroll else 1
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward_seq(params, cfg, tokens, *, collect_cache=False):
+    """tokens[B, S] -> (hidden[B, S, d], caches, aux_loss).
+
+    caches: per-layer prefill cache (stacked for scanned stacks) or None.
+    """
+    B, S = tokens.shape
+    ct = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens, ct)
+    positions = jnp.arange(S)
+    kinds = layer_kinds(cfg)
+
+    if cfg.layer_pattern == "xlstm":
+        def body(x, bp):
+            def inner(bp, x):
+                cs = {}
+                for key, kind in (("m0", "mlstm"), ("m1", "mlstm"),
+                                  ("m2", "mlstm"), ("s", "slstm")):
+                    x, c, _ = block_seq(bp[key], cfg, kind, x, positions)
+                    cs[key] = c
+                return x, cs
+
+            x, cs = _remat(inner, cfg)(bp, x)
+            return x, (cs if collect_cache else None)
+
+        x, caches = jax.lax.scan(body, x, params["blocks"],
+                                 unroll=_unroll(cfg))
+        x = L.rms_norm(params["final_norm"], x)
+        return x, caches, jnp.float32(0.0)
+
+    if cfg.layer_pattern == "local_global":
+        def body(x, bp):
+            def inner(bp, x):
+                x, c1, a1 = block_seq(bp["a"], cfg, "attn_local", x,
+                                      positions)
+                x, c2, a2 = block_seq(bp["b"], cfg, "attn", x, positions)
+                return x, {"a": c1, "b": c2}, a1 + a2
+            x, cs, a = _remat(inner, cfg)(bp, x)
+            return x, (cs if collect_cache else None, a)
+
+        x, (caches, auxs) = jax.lax.scan(body, x, params["blocks"], unroll=_unroll(cfg))
+        x = L.rms_norm(params["final_norm"], x)
+        return x, caches, jnp.sum(auxs)
+
+    if cfg.layer_pattern == "hybrid_shared_attn":
+        g_params, r_params, G, rem = _split_hybrid(cfg, params["blocks"])
+        sp = params["shared_attn"]
+
+        def group(x, bp_group):
+            """period mamba layers + one shared-attention application."""
+            def inner_layer(x, bp):
+                x, c, a = block_seq(bp, cfg, "mamba", x, positions)
+                return x, (c, a)
+
+            def inner(bp_group, x):
+                x, (mcs, auxs) = jax.lax.scan(inner_layer, x, bp_group, unroll=_unroll(cfg))
+                x, ac, a2 = block_seq(sp, cfg, "attn", x, positions)
+                return x, mcs, ac, jnp.sum(auxs) + a2
+
+            x, mcs, ac, a = _remat(inner, cfg)(bp_group, x)
+            return x, ((mcs, ac) if collect_cache else None, a)
+
+        x, (gcaches, auxs) = jax.lax.scan(group, x, g_params, unroll=_unroll(cfg))
+        aux = jnp.sum(auxs)
+        rcaches = None
+        if rem:
+            def tail(x, bp):
+                def inner(bp, x):
+                    return block_seq(bp, cfg, "mamba", x, positions)
+
+                x, c, a = _remat(inner, cfg)(bp, x)
+                return x, (c if collect_cache else None, a)
+
+            x, (rcaches, auxs2) = jax.lax.scan(tail, x, r_params, unroll=_unroll(cfg))
+            aux = aux + jnp.sum(auxs2)
+        x = L.rms_norm(params["final_norm"], x)
+        caches = None
+        if collect_cache:
+            caches = {"mamba_g": gcaches[0], "attn": gcaches[1],
+                      "mamba_r": rcaches}
+        return x, caches, aux
+
+    # uniform stack (dense / moe / pure ssm)
+    kind = kinds[0]
+
+    def body(x, bp):
+        def inner(bp, x):
+            return block_seq(bp, cfg, kind, x, positions)
+
+        x, c, a = _remat(inner, cfg)(bp, x)
+        return x, (c if collect_cache else None, a)
+
+    x, (caches, auxs) = jax.lax.scan(body, x, params["blocks"], unroll=_unroll(cfg))
+    x = L.rms_norm(params["final_norm"], x)
+    return x, caches, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# train / serve entry points
+# ---------------------------------------------------------------------------
+
+def compute_logits(params, cfg, hidden):
+    return L.logits(params["embed"], params.get("head"), hidden, cfg)
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token CE, ignoring target==-1; adds MoE aux loss.
+
+    CE stays in compute dtype with f32 accumulation (layers.cross_entropy)
+    — materializing f32 [B, S, V] buffers was the dominant memory term on
+    the big-vocab archs (see EXPERIMENTS.md §Perf)."""
+    hidden, _, aux = forward_seq(params, cfg, tokens=batch["tokens"])
+    w = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["head"]["w"]
+    loss = L.chunked_cross_entropy(w, hidden, batch["targets"], cfg)
+    return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+
+def init_cache(cfg, batch, max_len, *, seq_shard=False):
+    """Decode cache pytree matching what decode_step consumes."""
+    ct = jnp.dtype(cfg.compute_dtype)
+    kinds = layer_kinds(cfg)
+
+    def one(kind):
+        if kind.startswith("attn"):
+            return attn_mod.init_kv_cache(
+                cfg, batch, max_len, ct, seq_shard=seq_shard
+            )
+        if kind == "mamba":
+            return mamba_mod.init_mamba_cache(cfg, batch, ct)
+        if kind == "mlstm":
+            return xlstm_mod.init_mlstm_cache(cfg, batch, ct)
+        if kind == "slstm":
+            return xlstm_mod.init_slstm_cache(cfg, batch, ct)
+        raise ValueError(kind)
+
+    if cfg.layer_pattern == "xlstm":
+        G = cfg.n_layers // 4
+        grp = {"m0": one("mlstm"), "m1": one("mlstm"), "m2": one("mlstm"),
+               "s": one("slstm")}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (G,) + a.shape), grp
+        )
+    if cfg.layer_pattern == "local_global":
+        pair = {"a": one("attn_local"), "b": one("attn")}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers // 2,) + a.shape),
+            pair,
+        )
+    if cfg.layer_pattern == "hybrid_shared_attn":
+        period = cfg.shared_attn_period
+        G = cfg.n_layers // period
+        rem = cfg.n_layers - G * period
+        return {
+            "mamba_g": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (G, period) + a.shape),
+                one("mamba"),
+            ),
+            "attn": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (G,) + a.shape), one("attn")
+            ),
+            "mamba_r": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (rem,) + a.shape), one("mamba")
+            ) if rem else None,
+        }
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        one(kinds[0]),
+    )
+
+
+def _mixer_decode(bp, cfg, kind, h, cache, pos):
+    if kind.startswith("attn"):
+        window = cfg.local_window if kind == "attn_local" else None
+        return attn_mod.decode_attention(bp, cfg, h, cache, pos,
+                                         window=window)
+    if kind == "mamba":
+        return mamba_mod.mamba_decode_step(bp, cfg, h, cache)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_decode_step(bp, cfg, h, cache)
+    if kind == "slstm":
+        return xlstm_mod.slstm_decode_step(bp, cfg, h, cache)
+    raise ValueError(kind)
+
+
+def block_decode(bp, cfg, kind, x, cache, pos):
+    h = L.rms_norm(bp["norm1"], x)
+    mix, cache = _mixer_decode(bp["mixer"], cfg, kind, h, cache, pos)
+    if cfg.sandwich_norm:
+        mix = L.rms_norm(bp["norm1b"], mix)
+    x = x + mix
+    if _has_ffn(cfg, kind):
+        h2 = L.rms_norm(bp["norm2"], x)
+        if cfg.n_experts > 0:
+            f, _ = mlp_mod.moe(bp["ffn"], cfg, h2)
+        else:
+            f = mlp_mod.mlp(bp["ffn"], cfg, h2)
+        if cfg.sandwich_norm:
+            f = L.rms_norm(bp["norm2b"], f)
+        x = x + f
+    return x, cache
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """token[B, 1] + cache -> (logits[B, 1, V], new_cache). pos: scalar."""
+    B = token.shape[0]
+    ct = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], token, ct)
+    kinds = layer_kinds(cfg)
+
+    if cfg.layer_pattern == "xlstm":
+        def body(x, scanned):
+            bp, cc = scanned
+            cs = {}
+            for key, kind in (("m0", "mlstm"), ("m1", "mlstm"),
+                              ("m2", "mlstm"), ("s", "slstm")):
+                x, c = block_decode(bp[key], cfg, kind, x, cc[key], pos)
+                cs[key] = c
+            return x, cs
+
+        x, new = jax.lax.scan(body, x, (params["blocks"], cache),
+                              unroll=_unroll(cfg))
+        x = L.rms_norm(params["final_norm"], x)
+        return compute_logits(params, cfg, x), new
+
+    if cfg.layer_pattern == "local_global":
+        def body(x, scanned):
+            bp, cc = scanned
+            x, c1 = block_decode(bp["a"], cfg, "attn_local", x, cc["a"], pos)
+            x, c2 = block_decode(bp["b"], cfg, "attn", x, cc["b"], pos)
+            return x, {"a": c1, "b": c2}
+
+        x, new = jax.lax.scan(body, x, (params["blocks"], cache), unroll=_unroll(cfg))
+        x = L.rms_norm(params["final_norm"], x)
+        return compute_logits(params, cfg, x), new
+
+    if cfg.layer_pattern == "hybrid_shared_attn":
+        g_params, r_params, G, rem = _split_hybrid(cfg, params["blocks"])
+        sp = params["shared_attn"]
+
+        def group(x, scanned):
+            bp_group, mcs, ac = scanned
+
+            def layer(x, sc):
+                bp, mc = sc
+                x, mc2 = block_decode(bp, cfg, "mamba", x, mc, pos)
+                return x, mc2
+
+            x, mcs2 = jax.lax.scan(layer, x, (bp_group, mcs), unroll=_unroll(cfg))
+            x, ac2 = block_decode(sp, cfg, "attn", x, ac, pos)
+            return x, (mcs2, ac2)
+
+        x, (mg_new, ac_new) = jax.lax.scan(
+            group, x, (g_params, cache["mamba_g"], cache["attn"]),
+            unroll=_unroll(cfg),
+        )
+        mr_new = None
+        if rem:
+            def tail(x, sc):
+                bp, mc = sc
+                return block_decode(bp, cfg, "mamba", x, mc, pos)
+
+            x, mr_new = jax.lax.scan(tail, x, (r_params, cache["mamba_r"]), unroll=_unroll(cfg))
+        x = L.rms_norm(params["final_norm"], x)
+        new = {"mamba_g": mg_new, "attn": ac_new, "mamba_r": mr_new}
+        return compute_logits(params, cfg, x), new
+
+    kind = kinds[0]
+
+    def body(x, scanned):
+        bp, cc = scanned
+        return block_decode(bp, cfg, kind, x, cc, pos)
+
+    x, new = jax.lax.scan(body, x, (params["blocks"], cache), unroll=_unroll(cfg))
+    x = L.rms_norm(params["final_norm"], x)
+    return compute_logits(params, cfg, x), new
+
+
+def prefill(params, cfg, tokens):
+    """tokens[B, S] -> (last-position logits [B, V], caches)."""
+    hidden, caches, _ = forward_seq(params, cfg, tokens, collect_cache=True)
+    logits = compute_logits(params, cfg, hidden[:, -1:, :])
+    return logits[:, 0], caches

@@ -1,0 +1,265 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel + recurrent forms) and
+sLSTM (scalar memory, recurrent) — arXiv:2405.04517, simplified block wiring.
+
+mLSTM training uses the stabilized parallel (quadratic) form; decode is the
+O(1) recurrent update, which is why xlstm-125m runs the ``long_500k`` cell.
+sLSTM is inherently recurrent (lax.scan over time).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.partitioning import ParamDef, constrain
+
+__all__ = [
+    "mlstm_defs", "mlstm_seq", "mlstm_decode_step", "init_mlstm_cache",
+    "slstm_defs", "slstm_seq", "slstm_decode_step", "init_slstm_cache",
+]
+
+_CONV_K = 4
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg):
+    d_inner = 2 * cfg.d_model
+    dh = d_inner // cfg.n_heads
+    return d_inner, cfg.n_heads, dh
+
+
+def mlstm_defs(cfg):
+    d = cfg.d_model
+    d_inner, H, dh = _mdims(cfg)
+    return {
+        "w_up": ParamDef((d, 2 * d_inner), ("embed", "mlp")),
+        "conv_w": ParamDef((_CONV_K, d_inner), ("conv", "mlp")),
+        "conv_b": ParamDef((d_inner,), ("mlp",), init="zeros"),
+        "wq": ParamDef((d_inner, d_inner), ("mlp", None)),
+        "wk": ParamDef((d_inner, d_inner), ("mlp", None)),
+        "wv": ParamDef((d_inner, d_inner), ("mlp", None)),
+        "w_if": ParamDef((d_inner, 2 * H), ("mlp", None), scale=0.01),
+        "b_if": ParamDef((2 * H,), (None,), init="zeros"),
+        "norm": {"scale": ParamDef((d_inner,), ("mlp",), init="ones")},
+        "w_down": ParamDef((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):  # x[B, S, C]
+    S = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    win = jnp.stack([pad[:, i : i + S] for i in range(_CONV_K)], axis=-1)
+    return jax.nn.silu(jnp.einsum("bsck,kc->bsc", win, w) + b)
+
+
+def mlstm_seq(p, cfg, x, chunk=256):
+    """Chunkwise stabilized mLSTM (parallel within chunks, recurrent matrix
+    state across chunks — keeps memory at O(S * Lc) instead of O(S^2))."""
+    B, S, d = x.shape
+    d_inner, H, dh = _mdims(cfg)
+    ct = x.dtype
+    Lc = min(chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(ct))
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = _causal_conv(xi, p["conv_w"].astype(ct), p["conv_b"].astype(ct))
+    q = jnp.einsum("bse,ef->bsf", xc, p["wq"].astype(ct))
+    k = jnp.einsum("bse,ef->bsf", xc, p["wk"].astype(ct))
+    v = jnp.einsum("bse,ef->bsf", xi, p["wv"].astype(ct))
+    gates = (
+        jnp.einsum("bse,eg->bsg", xc, p["w_if"].astype(ct))
+        + p["b_if"].astype(ct)
+    ).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)          # [B, S, H]
+
+    def to_chunks(a, tail):
+        return jnp.moveaxis(a.reshape((B, nc, Lc) + tail), 1, 0)
+
+    qc = to_chunks(q.astype(jnp.float32).reshape(B, S, H, dh), (H, dh))
+    kc = to_chunks(
+        (k.astype(jnp.float32) / (dh ** 0.5)).reshape(B, S, H, dh), (H, dh)
+    )
+    vc = to_chunks(v.astype(jnp.float32).reshape(B, S, H, dh), (H, dh))
+    ic = to_chunks(i_pre, (H,))
+    fc = to_chunks(jax.nn.log_sigmoid(f_pre), (H,))
+    tril = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(carry, blk):
+        C_prev, n_prev, m_prev = carry
+        q, k, v, i_p, logf = blk                          # [B, Lc, ...]
+        fcum = jnp.cumsum(logf, axis=1)                   # [B, Lc, H]
+        dtil = (
+            fcum[:, :, None, :] - fcum[:, None, :, :] + i_p[:, None, :, :]
+        )
+        dtil = jnp.where(tril[None, :, :, None], dtil, -jnp.inf)
+        inter_log = fcum + m_prev[:, None, :]             # [B, Lc, H]
+        m_t = jnp.maximum(jnp.max(dtil, axis=2), inter_log)
+        Dl = jnp.exp(dtil - m_t[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", q, k) * Dl
+        inter_w = jnp.exp(inter_log - m_t)                # [B, Lc, H]
+        num = jnp.einsum("btsh,bshd->bthd", scores, v) + inter_w[
+            ..., None
+        ] * jnp.einsum("bthd,bhde->bthe", q, C_prev)
+        qn = jnp.einsum("bthd,bhd->bth", q, n_prev)
+        den = jnp.maximum(
+            jnp.abs(scores.sum(axis=2) + inter_w * qn), jnp.exp(-m_t)
+        )
+        h = num / den[..., None]                          # [B, Lc, H, dh]
+        # end-of-chunk state
+        total = fcum[:, -1, :]                            # [B, H]
+        su = total[:, None, :] - fcum + i_p               # [B, s, H]
+        m_next = jnp.maximum(total + m_prev, jnp.max(su, axis=1))
+        w_s = jnp.exp(su - m_next[:, None, :])
+        carry_w = jnp.exp(total + m_prev - m_next)
+        C_next = carry_w[..., None, None] * C_prev + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_s, k, v
+        )
+        n_next = carry_w[..., None] * n_prev + jnp.einsum(
+            "bsh,bshd->bhd", w_s, k
+        )
+        return (C_next, n_next, m_next), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc),
+        unroll=True if cfg.scan_unroll else 1,
+    )
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_inner).astype(ct)
+
+    h = L.rms_norm(p["norm"], h) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(ct))
+    state = {
+        "conv": xi[:, S - (_CONV_K - 1):, :], "c": Cf, "n": nf, "m": mf,
+    }
+    return constrain(out, "batch", "seq", "act_embed"), state
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    d_inner, H, dh = _mdims(cfg)
+    return {
+        "conv": jnp.zeros((batch, _CONV_K - 1, d_inner), dtype),
+        "c": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(p, cfg, x, cache):
+    B = x.shape[0]
+    d_inner, H, dh = _mdims(cfg)
+    ct = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(ct))
+    xi, z = jnp.split(up, 2, axis=-1)
+    win = jnp.concatenate([cache["conv"], xi], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(ct))
+        + p["conv_b"].astype(ct)
+    )
+    q = (xc @ p["wq"].astype(ct)).reshape(B, H, dh).astype(jnp.float32)
+    k = (xc @ p["wk"].astype(ct)).reshape(B, H, dh).astype(
+        jnp.float32
+    ) / (dh ** 0.5)
+    v = (xi[:, 0] @ p["wv"].astype(ct)).reshape(B, H, dh).astype(jnp.float32)
+    gates = (
+        xc @ p["w_if"].astype(ct) + p["b_if"].astype(ct)
+    ).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)          # [B, H]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    fs = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    is_ = jnp.exp(i_pre - m_new)[..., None]
+    c = cache["c"] * fs[..., None] + is_[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    n = cache["n"] * fs + is_ * k
+    num = jnp.einsum("bhde,bhd->bhe", c, q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new)
+    )
+    h = (num / den[..., None]).reshape(B, 1, d_inner).astype(ct)
+    h = L.rms_norm(p["norm"], h) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(ct))
+    cache = {"conv": win[:, 1:], "c": c, "n": n, "m": m_new}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    return {
+        "w_gates": ParamDef((d, 4 * d), ("embed", "mlp")),
+        "r_gates": ParamDef((H, dh, 4 * dh), ("ssm_heads", None, None),
+                            scale=0.01),
+        "b_gates": ParamDef((4 * d,), (None,), init="zeros"),
+        "norm": {"scale": ParamDef((d,), (None,), init="ones")},
+        "w_down": ParamDef((d, d), ("embed", None)),
+    }
+
+
+def _slstm_cell(p, cfg, xt, state):
+    """One sLSTM step. xt[B, 4d] pre-projected gates; state dict."""
+    B = xt.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    rec = jnp.einsum(
+        "bhd,hdg->bhg", h.reshape(B, H, dh), p["r_gates"].astype(jnp.float32)
+    ).reshape(B, 4 * d)
+    g = xt.astype(jnp.float32) + rec + p["b_gates"].astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)  # [B, d]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def init_slstm_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z - 1e30}
+
+
+def slstm_seq(p, cfg, x):
+    """Recurrent scan over time (sLSTM has no parallel form)."""
+    B, S, d = x.shape
+    ct = x.dtype
+    xg = jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(ct))
+
+    def step(state, xt):
+        new = _slstm_cell(p, cfg, xt, state)
+        return new, new["h"]
+
+    state0 = init_slstm_cache(cfg, B, ct)
+    final, hs = jax.lax.scan(step, state0, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(ct)                # [B, S, d]
+    h = L.rms_norm(p["norm"], h)
+    out = jnp.einsum("bsd,de->bse", h, p["w_down"].astype(ct))
+    return constrain(out, "batch", "seq", "act_embed"), final
+
+
+def slstm_decode_step(p, cfg, x, cache):
+    ct = x.dtype
+    xg = jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(ct))
+    new = _slstm_cell(p, cfg, xg[:, 0], cache)
+    h = L.rms_norm(p["norm"], new["h"][:, None].astype(ct))
+    out = jnp.einsum("bsd,de->bse", h, p["w_down"].astype(ct))
+    return out, new

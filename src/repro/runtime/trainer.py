@@ -1,0 +1,126 @@
+"""Fault-tolerant training runtime.
+
+Wraps the pure train_step with the operational machinery a 1000+ node job
+needs:
+
+  * auto-restore: on start, resume from the newest checkpoint if present;
+  * periodic checkpointing (atomic, retention-K) + final checkpoint;
+  * step watchdog: per-step wall-time EWMA; a step slower than
+    ``straggler_factor`` x EWMA is logged as a straggler event and counted —
+    on real fleets this signal feeds the rescheduler; here it feeds metrics
+    and (optionally) a hard deadline abort;
+  * crash-retry loop: a failing step triggers restore-from-checkpoint and
+    replay, up to ``max_restarts`` (covers transient device loss; determinism
+    comes from the seeded data pipeline being re-wound to the restored step);
+  * preemption hook: SIGTERM sets a flag; the loop checkpoints and exits
+    cleanly at the next step boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+
+__all__ = ["TrainLoopConfig", "run_train_loop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 3.0
+    straggler_deadline_s: float | None = None
+    max_restarts: int = 2
+    log_every: int = 10
+
+
+class _Preempt:
+    def __init__(self):
+        self.flag = False
+        try:
+            signal.signal(signal.SIGTERM, self._h)
+        except ValueError:
+            pass  # not on main thread (tests)
+
+    def _h(self, *_):
+        self.flag = True
+
+
+def run_train_loop(
+    step_fn,              # (state, batch) -> (state, metrics)
+    init_state,           # pytree (params, opt_state, ...)
+    next_batch,           # (step:int) -> batch  (deterministic per step!)
+    cfg: TrainLoopConfig,
+    *,
+    log=print,
+):
+    """Returns (final_state, history dict)."""
+    preempt = _Preempt()
+    state = init_state
+    start_step = 0
+    restored = ckpt.latest_step(cfg.ckpt_dir)
+    if restored is not None:
+        state, start_step, _ = ckpt.restore(cfg.ckpt_dir, init_state)
+        log(f"[trainer] restored checkpoint at step {start_step}")
+
+    history = {"loss": [], "straggler_events": 0, "restarts": 0}
+    ewma = None
+    step = start_step
+    restarts = 0
+    while step < cfg.total_steps:
+        batch = next_batch(step)
+        t0 = time.perf_counter()
+        try:
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics)
+        except Exception as e:  # noqa: BLE001 — transient failure path
+            restarts += 1
+            history["restarts"] = restarts
+            log(f"[trainer] step {step} failed ({type(e).__name__}: {e}); "
+                f"restart {restarts}/{cfg.max_restarts}")
+            if restarts > cfg.max_restarts:
+                raise
+            last = ckpt.latest_step(cfg.ckpt_dir)
+            if last is not None:
+                state, step, _ = ckpt.restore(cfg.ckpt_dir, init_state)
+                log(f"[trainer] rolled back to step {step}")
+            continue
+        dt = time.perf_counter() - t0
+
+        # straggler watchdog
+        if ewma is None:
+            ewma = dt
+        else:
+            if dt > cfg.straggler_factor * ewma:
+                history["straggler_events"] += 1
+                log(f"[trainer] straggler: step {step} took {dt:.3f}s "
+                    f"(ewma {ewma:.3f}s)")
+            if (cfg.straggler_deadline_s is not None
+                    and dt > cfg.straggler_deadline_s):
+                raise TimeoutError(
+                    f"step {step} exceeded deadline {cfg.straggler_deadline_s}s"
+                )
+            ewma = 0.9 * ewma + 0.1 * dt
+
+        loss = float(np.asarray(metrics.get("loss", np.nan)))
+        history["loss"].append(loss)
+        if step % cfg.log_every == 0:
+            log(f"[trainer] step {step} loss {loss:.4f} "
+                f"({dt*1e3:.0f} ms/step)")
+        step += 1
+
+        if step % cfg.ckpt_every == 0 or preempt.flag:
+            ckpt.save(cfg.ckpt_dir, step, state, keep=cfg.keep)
+            if preempt.flag:
+                log("[trainer] preemption: checkpointed and exiting")
+                return state, history
+
+    ckpt.save(cfg.ckpt_dir, step, state, keep=cfg.keep)
+    return state, history

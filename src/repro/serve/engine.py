@@ -1,0 +1,83 @@
+"""RFANN serving engine: request batching over the iRangeGraph index.
+
+Mirrors a production vector-search frontend: requests (vector + value range
++ k) accumulate in a queue; the engine pads them to fixed batch shapes
+(jit-friendly buckets), runs the improvised-graph search, and returns
+per-request results with original ids. Stats track qps / recall probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.index import RangeGraphIndex
+
+__all__ = ["Request", "Result", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    vector: np.ndarray
+    lo: float
+    hi: float
+    k: int = 10
+
+
+@dataclasses.dataclass
+class Result:
+    ids: np.ndarray         # original object ids
+    dists: np.ndarray
+    latency_s: float
+
+
+class ServingEngine:
+    def __init__(
+        self, index: RangeGraphIndex, *, ef: int = 64, max_batch: int = 64,
+        k_bucket: int = 10,
+    ):
+        self.index = index
+        self.ef = ef
+        self.max_batch = max_batch
+        self.k_bucket = k_bucket
+        self._queue: list[Request] = []
+        self.stats = {"served": 0, "batches": 0, "wall_s": 0.0}
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def flush(self) -> list[Result]:
+        out: list[Result] = []
+        while self._queue:
+            batch = self._queue[: self.max_batch]
+            self._queue = self._queue[self.max_batch :]
+            out.extend(self._run_batch(batch))
+        return out
+
+    def _run_batch(self, batch: Sequence[Request]) -> list[Result]:
+        t0 = time.perf_counter()
+        B = len(batch)
+        pad = self.max_batch - B  # fixed shapes -> one compile per bucket
+        q = np.stack([r.vector for r in batch] + [batch[0].vector] * pad)
+        lo = np.array([r.lo for r in batch] + [batch[0].lo] * pad)
+        hi = np.array([r.hi for r in batch] + [batch[0].hi] * pad)
+        k = max(max(r.k for r in batch), self.k_bucket)
+        L, R = self.index.ranks_of(lo, hi)
+        res = self.index.search_ranks(q, L, R, k=k, ef=self.ef)
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        orig = self.index.original_ids(ids)
+        dt = time.perf_counter() - t0
+        self.stats["served"] += B
+        self.stats["batches"] += 1
+        self.stats["wall_s"] += dt
+        return [
+            Result(orig[i, : batch[i].k], dists[i, : batch[i].k], dt)
+            for i in range(B)
+        ]
+
+    @property
+    def qps(self) -> float:
+        return self.stats["served"] / max(self.stats["wall_s"], 1e-9)

@@ -1,0 +1,178 @@
+"""Logical-axis partitioning (MaxText-style) with divisibility fallback.
+
+Every parameter is declared as a ``ParamDef(shape, axes, ...)`` where
+``axes`` names each dimension logically ("vocab", "embed", "mlp", ...).
+``RULES`` maps logical names to mesh axes; a dimension whose size does not
+divide its mesh axis falls back to replication (e.g. 4-head xlstm on a
+16-way model axis), so every assigned architecture shards without bespoke
+case analysis.
+
+The same machinery shards activations (see ``act_rules``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ParamDef", "RULES", "init_params", "abstract_params", "param_specs",
+    "named_shardings", "logical_to_spec", "constrain", "use_global_mesh",
+    "global_mesh",
+]
+
+_GLOBAL_MESH: list = [None]
+
+
+@contextlib.contextmanager
+def use_global_mesh(mesh: Mesh):
+    """Make ``mesh`` visible to ``constrain`` inside traced model code."""
+    _GLOBAL_MESH.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _GLOBAL_MESH.pop()
+
+
+def global_mesh() -> Mesh | None:
+    return _GLOBAL_MESH[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple          # logical name (or None) per dim; len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# logical axis -> mesh axis (or tuple for multi-axis sharding, or None)
+RULES: Mapping[str, object] = {
+    "vocab": "model",
+    "embed": "data",        # FSDP: weight-stationary dim sharded over data
+    "embed_tp": "model",    # used where embed is the contracting TP dim
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": None,
+    "expert": "model",
+    "layers": None,
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "data",    # sequence parallelism for long-context decode
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_expert": "model",
+    "act_vocab": "model",
+}
+
+
+def logical_to_spec(axes, mesh: Mesh, shape=None) -> P:
+    """Map logical axes -> PartitionSpec.
+
+    Falls back to replication when the dim does not divide the mesh axis,
+    and when a mesh axis is already taken by an earlier dim of the same
+    tensor (e.g. stacked MoE weights map both "expert" and "mlp" to the
+    model axis — the first one wins)."""
+    out = []
+    used: set = set()
+    for i, name in enumerate(axes):
+        if name is None:
+            out.append(None)
+            continue
+        mesh_ax = RULES.get(name)
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_ax, tuple):
+            mesh_ax = tuple(
+                a for a in mesh_ax if a in mesh.shape and a not in used
+            )
+            if not mesh_ax:
+                out.append(None)
+                continue
+            size = int(np.prod([mesh.shape[a] for a in mesh_ax]))
+            if len(mesh_ax) == 1:
+                mesh_ax = mesh_ax[0]
+        else:
+            if mesh_ax not in mesh.shape or mesh_ax in used:
+                out.append(None)
+                continue
+            size = mesh.shape[mesh_ax]
+        if shape is not None and shape[i] % size != 0:
+            out.append(None)  # divisibility fallback: replicate
+        else:
+            out.append(mesh_ax)
+            for a in (mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)):
+                used.add(a)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# param tree materialization
+# ---------------------------------------------------------------------------
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    """Materialize a pytree of ParamDef into real arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            a = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            a = jnp.ones(d.shape, dtype)
+        else:
+            a = jax.random.normal(k, d.shape, dtype) * d.scale
+        arrs.append(a)
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(defs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def
+    )
+
+
+def param_specs(defs, mesh: Mesh):
+    """PartitionSpec tree matching the ParamDef tree."""
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.axes, mesh, d.shape), defs, is_leaf=_is_def
+    )
+
+
+def named_shardings(defs, mesh: Mesh):
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, logical_to_spec(d.axes, mesh, d.shape)),
+        defs,
+        is_leaf=_is_def,
+    )
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical names (no-op outside a mesh)."""
+    mesh = global_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,110 @@
+"""train_step / serve_step builders — the functions the launcher lowers.
+
+``build_train_step`` returns a pure function
+    (params, opt_state, batch[, err]) -> (params, opt_state, metrics[, err])
+with optional microbatch gradient accumulation (lax.scan over microbatches,
+so peak activation memory is one microbatch) and optional int8
+error-feedback gradient compression. Donation of params/opt_state is the
+caller's business (launch/train.py passes donate_argnums).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.train import compression
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+__all__ = ["build_train_step", "build_prefill_step", "build_decode_step"]
+
+
+def build_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compress: bool = False,
+):
+    loss_fn = model.loss
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, b):
+            acc, loss_acc = carry
+            loss, metrics, g = grads_of(params, b)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, loss_acc + loss), metrics
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (gsum, loss_sum), metrics = jax.lax.scan(
+            body, (zero, jnp.float32(0.0)), mb,
+            unroll=True if model.cfg.scan_unroll else 1,
+        )
+        g = jax.tree.map(lambda a: a / microbatches, gsum)
+        last_metrics = jax.tree.map(lambda a: a[-1], metrics)
+        return loss_sum / microbatches, last_metrics, g
+
+    if compress:
+        def step(params, opt_state, batch, err):
+            loss, metrics, grads = accumulate(params, batch)
+            grads, err = compression.compress_grads(grads, err)
+            params, opt_state, om = adamw_update(
+                opt_cfg, params, grads, opt_state
+            )
+            out = {"loss": loss, **metrics, **om}
+            return params, opt_state, out, err
+
+        return step
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = accumulate(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        out = {"loss": loss, **metrics, **om}
+        return params, opt_state, out
+
+    return step
+
+
+def build_prefill_step(model: Model):
+    def step(params, inputs):
+        return model.prefill(params, **inputs)
+
+    return step
+
+
+def build_decode_step(model: Model, *, sample_top_k: int = 0):
+    """serve_step for the decode shapes: one token for the whole batch
+    against the KV/state cache, returning the next token ids + new cache."""
+
+    def step(params, token, cache, pos):
+        logits, cache = model.decode(params, token, cache, pos)
+        logits = logits.reshape(logits.shape[0], -1)
+        # mask the padded vocab tail
+        cfg = model.cfg
+        if cfg.padded_vocab != cfg.vocab:
+            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+            logits = jnp.where(pad[None, :], -jnp.inf, logits)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return step

@@ -1,0 +1,90 @@
+"""Vectorized Algorithm 1 must match the literal paper transcription."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import edge_select
+
+
+def make_nbrs(rng, n, layers, m, logn):
+    """Random but structurally valid neighbor table: edges at layer lay stay
+    within the segment of their source node."""
+    nbrs = np.full((n, layers, m), -1, np.int32)
+    for u in range(n):
+        for lay in range(layers):
+            s = logn - lay
+            lo = (u >> s) << s
+            hi = min(lo + (1 << s) - 1, n - 1)
+            if hi <= lo:
+                continue
+            deg = rng.integers(0, m + 1)
+            if deg:
+                cands = rng.integers(lo, hi + 1, deg)
+                cands = cands[cands != u]
+                nbrs[u, lay, : len(cands)] = cands
+    return nbrs
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_select_edges_matches_reference(data):
+    logn = data.draw(st.integers(2, 6))
+    n = 1 << logn
+    m = data.draw(st.integers(2, 6))
+    layers = logn + 1
+    seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(seed)
+    nbrs = make_nbrs(rng, n, layers, m, logn)
+    L = data.draw(st.integers(0, n - 1))
+    R = data.draw(st.integers(L, n - 1))
+    u = data.draw(st.integers(L, R))
+    for skip in (True, False):
+        got = np.asarray(
+            edge_select.select_edges(
+                nbrs[u], u, L, R, logn=logn, m_out=m, skip_layers=skip
+            )
+        )
+        want = edge_select.select_edges_reference(
+            nbrs[u], u, L, R, logn=logn, m_out=m, skip_layers=skip
+        )
+        got = [int(x) for x in got if x >= 0]
+        assert got == want, (u, L, R, skip, got, want)
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_selected_edges_always_in_range(data):
+    logn = data.draw(st.integers(2, 6))
+    n = 1 << logn
+    m = 4
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    nbrs = make_nbrs(rng, n, logn + 1, m, logn)
+    L = data.draw(st.integers(0, n - 1))
+    R = data.draw(st.integers(L, n - 1))
+    us = np.arange(L, R + 1, dtype=np.int32)
+    out = np.asarray(
+        edge_select.select_edges_batch(
+            nbrs, us, np.int32(L), np.int32(R), logn=logn, m_out=m
+        )
+    )
+    sel = out[out >= 0]
+    assert ((sel >= L) & (sel <= R)).all()
+    # no self loops, no duplicates per row
+    for i, row in enumerate(out):
+        row = row[row >= 0]
+        assert (row != us[i]).all()
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_full_range_uses_root_only():
+    logn, m = 4, 3
+    n = 1 << logn
+    rng = np.random.default_rng(0)
+    nbrs = make_nbrs(rng, n, logn + 1, m, logn)
+    u = 5
+    got = np.asarray(
+        edge_select.select_edges(
+            nbrs[u], u, 0, n - 1, logn=logn, m_out=m
+        )
+    )
+    root = set(int(x) for x in nbrs[u, 0] if x >= 0 and x != u)
+    assert set(int(x) for x in got if x >= 0) <= root

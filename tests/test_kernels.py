@@ -1,0 +1,139 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.distance as dist_k
+import repro.kernels.flash_attention as flash_k
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# pairwise distance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize(
+    "bq,n,d",
+    [(8, 8, 8), (16, 32, 24), (37, 65, 40), (128, 128, 64), (3, 200, 130)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_dist_sweep(metric, bq, n, d, dtype):
+    rng = np.random.default_rng(bq * 1000 + n + d)
+    q = jnp.asarray(rng.standard_normal((bq, d)), dtype)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    got = dist_k.pairwise_dist_kernel_call(
+        q, x, metric=metric, block_q=16, block_n=32, block_k=16,
+        interpret=True,
+    )
+    want = ref.pairwise_dist(q, x, metric=metric)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_pairwise_dist_ordering_preserved():
+    """Distances drive top-k choices; ordering must match the oracle."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((256, 32)), jnp.float32)
+    got = dist_k.pairwise_dist_kernel_call(q, x, interpret=True)
+    want = ref.pairwise_dist(q, x)
+    np.testing.assert_array_equal(
+        np.argsort(np.asarray(got), axis=1)[:, :10],
+        np.argsort(np.asarray(want), axis=1)[:, :10],
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _mk(B, Hq, Hkv, Sq, Skv, Dh, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, Hq, Sq, Dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Skv, Dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Skv, Dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,Dh",
+    [(1, 2, 2, 32, 16), (2, 4, 2, 64, 32), (1, 8, 1, 48, 16),
+     (1, 2, 2, 100, 24)],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_causal_gqa_sweep(B, Hq, Hkv, S, Dh, causal):
+    q, k, v = _mk(B, Hq, Hkv, S, S, Dh, jnp.float32, seed=S)
+    got = flash_k.flash_attention_kernel_call(
+        q, k, v, causal=causal, block_q=16, block_k=16, interpret=True
+    )
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("window", [8, 16, 64])
+def test_flash_attention_local_window(window):
+    q, k, v = _mk(1, 2, 2, 64, 64, 16, jnp.float32, seed=window)
+    got = flash_k.flash_attention_kernel_call(
+        q, k, v, causal=True, window=window, block_q=16, block_k=16,
+        interpret=True,
+    )
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_flash_attention_softcap():
+    q, k, v = _mk(1, 4, 4, 32, 32, 16, jnp.float32, seed=9)
+    got = flash_k.flash_attention_kernel_call(
+        q, k, v, causal=True, softcap=20.0, block_q=16, block_k=16,
+        interpret=True,
+    )
+    want = ref.attention(q, k, v, causal=True, softcap=20.0)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_flash_attention_decode_offset():
+    """Decode: Sq=1 with a long KV and q_offset = Skv - 1."""
+    q, k, v = _mk(2, 4, 2, 1, 128, 32, jnp.float32, seed=11)
+    got = flash_k.flash_attention_kernel_call(
+        q, k, v, causal=True, q_offset=127, block_q=8, block_k=32,
+        interpret=True,
+    )
+    want = ref.attention(q, k, v, causal=True, q_offset=127)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_flash_attention_bf16():
+    q, k, v = _mk(1, 2, 2, 64, 64, 32, jnp.bfloat16, seed=4)
+    got = flash_k.flash_attention_kernel_call(
+        q, k, v, causal=True, block_q=32, block_k=32, interpret=True
+    )
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_flash_attention_matches_unmasked_softmax_rows():
+    """Numerical property: each output row is a convex combination of V."""
+    q, k, v = _mk(1, 1, 1, 16, 16, 8, jnp.float32, seed=2)
+    v = jnp.abs(v)
+    got = np.asarray(
+        flash_k.flash_attention_kernel_call(
+            q, k, v, causal=False, block_q=8, block_k=8, interpret=True
+        )
+    )
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    assert (got >= vmin - 1e-5).all() and (got <= vmax + 1e-5).all()

@@ -1,0 +1,84 @@
+"""RNG pruning invariants (paper Def. 2.1)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rng as rng_mod
+
+
+def ref_prune(u_vec, cand_vecs, cand_ids, m, alpha=1.0):
+    """Sequential reference of the candidate-based RNG rule."""
+    d_u = ((cand_vecs - u_vec) ** 2).sum(1)
+    order = np.argsort(d_u, kind="stable")
+    kept = []
+    seen = set()
+    for j in order:
+        if cand_ids[j] < 0 or cand_ids[j] in seen:
+            continue
+        seen.add(cand_ids[j])
+        pruned = any(
+            alpha * ((cand_vecs[i] - cand_vecs[j]) ** 2).sum() < d_u[j]
+            for i in kept
+        )
+        if not pruned and len(kept) < m:
+            kept.append(j)
+    return [int(cand_ids[j]) for j in kept]
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_prune_matches_reference(data):
+    d = data.draw(st.integers(2, 8))
+    C = data.draw(st.integers(2, 24))
+    m = data.draw(st.integers(1, 8))
+    seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(seed)
+    u = rng.standard_normal(d).astype(np.float32)
+    cand = rng.standard_normal((C, d)).astype(np.float32)
+    ids = np.arange(C, dtype=np.int32)
+    # randomly invalidate some slots
+    bad = rng.random(C) < 0.2
+    ids = np.where(bad, -1, ids).astype(np.int32)
+    dists = ((cand - u) ** 2).sum(1).astype(np.float32)
+    dists = np.where(bad, np.inf, dists)
+    cc = rng_mod.pairwise_sq_dists(cand[None])[0]
+    got = np.asarray(
+        rng_mod.prune(ids, dists, cc, m=m, alpha=1.0, fill=False)
+    )
+    got = [int(x) for x in got if x >= 0]
+    want = ref_prune(u, cand, ids, m)
+    assert got == want, (got, want)
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_kept_edges_cannot_prune_each_other(data):
+    """Core RNG property: for kept edges v ordered by distance, no earlier
+    kept w satisfies delta(w, v) < delta(u, v)."""
+    d, C, m = 4, 16, 6
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    u = rng.standard_normal(d).astype(np.float32)
+    cand = rng.standard_normal((C, d)).astype(np.float32)
+    ids = np.arange(C, dtype=np.int32)
+    dists = ((cand - u) ** 2).sum(1).astype(np.float32)
+    cc = np.asarray(rng_mod.pairwise_sq_dists(cand[None])[0])
+    kept = np.asarray(rng_mod.prune(ids, dists, cc, m=m, fill=False))
+    kept = [int(x) for x in kept if x >= 0]
+    for a in range(len(kept)):
+        for b in range(a + 1, len(kept)):
+            i, j = kept[a], kept[b]
+            assert not (cc[i, j] < dists[j] and dists[i] < dists[j]), (
+                "kept edge should have been pruned"
+            )
+
+
+def test_fill_pads_with_nearest_pruned():
+    # three collinear points: the middle one prunes the far one
+    u = np.zeros(2, np.float32)
+    cand = np.array([[1, 0], [2, 0], [10, 0]], np.float32)
+    ids = np.array([0, 1, 2], np.int32)
+    dists = ((cand - u) ** 2).sum(1)
+    cc = np.asarray(rng_mod.pairwise_sq_dists(cand[None])[0])
+    nofill = np.asarray(rng_mod.prune(ids, dists, cc, m=3, fill=False))
+    fill = np.asarray(rng_mod.prune(ids, dists, cc, m=3, fill=True))
+    assert [int(x) for x in nofill if x >= 0] == [0]
+    assert [int(x) for x in fill] == [0, 1, 2]

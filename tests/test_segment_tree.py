@@ -1,0 +1,88 @@
+"""Property tests for the closed-form segment-tree math."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import segment_tree as sgt
+
+
+def ref_seg_bounds(u, lay, logn):
+    size = 1 << (logn - lay)
+    lo = (u // size) * size
+    return lo, lo + size - 1
+
+
+@given(
+    logn=st.integers(1, 12),
+    u=st.integers(0, 2**12 - 1),
+    lay=st.integers(0, 12),
+)
+@settings(max_examples=200, deadline=None)
+def test_seg_bounds_matches_reference(logn, u, lay):
+    u = u % (1 << logn)
+    lay = lay % (logn + 1)
+    lo, hi = sgt.seg_bounds(np.int32(u), np.int32(lay), logn)
+    rlo, rhi = ref_seg_bounds(u, lay, logn)
+    assert (int(lo), int(hi)) == (rlo, rhi)
+    assert rlo <= u <= rhi
+
+
+@given(st.data())
+@settings(max_examples=100, deadline=None)
+def test_decompose_range_exact_cover(data):
+    logn = data.draw(st.integers(1, 10))
+    n = 1 << logn
+    L = data.draw(st.integers(0, n - 1))
+    R = data.draw(st.integers(L, n - 1))
+    segs = sgt.decompose_range(L, R, logn)
+    covered = np.zeros(n, bool)
+    for lay, lo, hi in segs:
+        rlo, rhi = ref_seg_bounds(lo, lay, logn)
+        assert (rlo, rhi) == (lo, hi), "decomposition must use tree segments"
+        assert not covered[lo : hi + 1].any(), "segments must be disjoint"
+        covered[lo : hi + 1] = True
+    assert covered[L : R + 1].all()
+    assert covered.sum() == R - L + 1
+    assert len(segs) <= 2 * logn + 1
+
+
+@given(st.data())
+@settings(max_examples=100, deadline=None)
+def test_covering_segment_is_smallest(data):
+    logn = data.draw(st.integers(1, 10))
+    n = 1 << logn
+    L = data.draw(st.integers(0, n - 1))
+    R = data.draw(st.integers(L, n - 1))
+    lay, lo, hi = sgt.covering_segment(L, R, logn)
+    assert lo <= L and R <= hi
+    if lay < logn:  # its children must not cover [L, R]
+        mid = (lo + hi) // 2
+        assert not (R <= mid or L > mid)
+
+
+@given(st.data())
+@settings(max_examples=150, deadline=None)
+def test_scan_mask_structure(data):
+    logn = data.draw(st.integers(2, 10))
+    n = 1 << logn
+    L = data.draw(st.integers(0, n - 1))
+    R = data.draw(st.integers(L, n - 1))
+    u = data.draw(st.integers(L, R))
+    mask = np.asarray(sgt.scan_mask(u, L, R, logn, skip_layers=True))
+    naive = np.asarray(sgt.scan_mask(u, L, R, logn, skip_layers=False))
+    assert mask.shape == (logn + 1,)
+    # skipping only removes layers
+    assert not (mask & ~naive).any()
+    # the first fully-covered layer is always scanned by both
+    for lay in range(logn + 1):
+        lo, hi = ref_seg_bounds(u, lay, logn)
+        if L <= lo and hi <= R:
+            assert mask[lay] and naive[lay]
+            assert not mask[lay + 1 :].any()
+            assert not naive[lay + 1 :].any()
+            break
+    else:
+        pytest.fail("leaf layer must be covered when u in range")
+    # full-range query scans exactly the root
+    full = np.asarray(sgt.scan_mask(u, 0, n - 1, logn, skip_layers=True))
+    assert full[0] and not full[1:].any()

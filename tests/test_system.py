@@ -1,0 +1,203 @@
+"""End-to-end behaviour tests for the iRangeGraph system."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.core import baselines, multiattr
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(7)
+    n, d = 512, 16
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    cfg = BuildConfig(m=8, ef_construction=32, brute_threshold=32)
+    return RangeGraphIndex.build(vectors, attrs, cfg), rng
+
+
+def test_build_invariants(small_index):
+    idx, _ = small_index
+    n, layers, m = idx.neighbors.shape
+    assert n == 512 and m == 8 and layers == idx.logn + 1
+    # every edge stays inside its layer's segment and points to a real node
+    for lay in range(layers):
+        s = idx.logn - lay
+        lo = (np.arange(n) >> s) << s
+        hi = lo + (1 << s) - 1
+        nb = idx.neighbors[:, lay, :]
+        ok = nb < 0
+        inseg = (nb >= lo[:, None]) & (nb <= hi[:, None]) & (nb < n)
+        assert (ok | inseg).all(), f"edge out of segment at layer {lay}"
+        # no self-loops
+        assert (nb != np.arange(n)[:, None]).all()
+
+
+def test_search_results_always_in_range(small_index):
+    idx, rng = small_index
+    B = 32
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    L = rng.integers(0, idx.n - 64, B).astype(np.int32)
+    R = (L + rng.integers(8, 64, B)).astype(np.int32)
+    res = idx.search_ranks(q, L, R, k=5, ef=32)
+    ids = np.asarray(res.ids)
+    for i in range(B):
+        got = ids[i][ids[i] >= 0]
+        assert ((got >= L[i]) & (got <= R[i])).all()
+
+
+def test_search_recall_beats_threshold(small_index):
+    idx, rng = small_index
+    B = 48
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    for span in (32, 128, 511):
+        L = rng.integers(0, idx.n - span, B).astype(np.int32)
+        R = (L + span - 1).astype(np.int32)
+        res = idx.search_ranks(q, L, R, k=10, ef=64)
+        gt, _ = idx.brute_force(q, L, R, k=10)
+        rec = recall(res.ids, gt)
+        assert rec >= 0.85, f"span {span}: recall {rec}"
+
+
+def test_skip_layers_close_to_naive(small_index):
+    """Layer skipping is an optimization; recall must stay comparable."""
+    idx, rng = small_index
+    B = 32
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    L = rng.integers(0, idx.n // 2, B).astype(np.int32)
+    R = (L + idx.n // 4).astype(np.int32)
+    gt, _ = idx.brute_force(q, L, R, k=10)
+    r_skip = recall(idx.search_ranks(q, L, R, k=10, ef=48).ids, gt)
+    r_naive = recall(
+        idx.search_ranks(q, L, R, k=10, ef=48, skip_layers=False).ids, gt
+    )
+    assert abs(r_skip - r_naive) < 0.12
+
+
+def test_duplicate_attribute_values():
+    rng = np.random.default_rng(3)
+    n, d = 256, 8
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.integers(0, 10, n).astype(np.float64)  # heavy duplication
+    idx = RangeGraphIndex.build(
+        vectors, attrs, BuildConfig(m=8, ef_construction=32)
+    )
+    q = rng.standard_normal((8, d)).astype(np.float32)
+    L, R = idx.ranks_of(np.full(8, 3.0), np.full(8, 6.0))
+    # value range [3, 6] must cover exactly the objects with attr in [3, 6]
+    want = np.sort(np.where((attrs >= 3) & (attrs <= 6))[0])
+    got = np.sort(idx.perm[L[0] : R[0] + 1])
+    np.testing.assert_array_equal(got, want)
+    res = idx.search_ranks(q, L, R, k=5, ef=32)
+    ids = np.asarray(res.ids)
+    orig = idx.original_ids(ids)
+    sel = orig[ids >= 0]
+    assert ((attrs[sel] >= 3) & (attrs[sel] <= 6)).all()
+
+
+def test_save_load_roundtrip(tmp_path, small_index):
+    idx, rng = small_index
+    p = str(tmp_path / "index.rg")
+    idx.save(p)
+    idx2 = RangeGraphIndex.load(p)
+    np.testing.assert_array_equal(idx.neighbors, idx2.neighbors)
+    np.testing.assert_array_equal(idx.vectors, idx2.vectors)
+    q = rng.standard_normal((4, idx.dim)).astype(np.float32)
+    L = np.array([10, 20, 30, 40], np.int32)
+    R = np.array([200, 210, 220, 230], np.int32)
+    a = idx.search_ranks(q, L, R, k=5, ef=32)
+    b = idx2.search_ranks(q, L, R, k=5, ef=32)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+def test_baselines_in_range_and_reasonable(small_index):
+    idx, rng = small_index
+    B = 24
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    span = 128
+    L = rng.integers(0, idx.n - span, B).astype(np.int32)
+    R = (L + span - 1).astype(np.int32)
+    gt, _ = idx.brute_force(q, L, R, k=10)
+    for name, fn in [
+        ("pre", baselines.prefilter),
+        ("post", baselines.postfilter),
+        ("in", baselines.infilter),
+        ("basic", baselines.basic_search),
+        ("superpost", baselines.super_postfilter),
+    ]:
+        res = fn(idx, q, L, R, k=10, ef=96)
+        ids = np.asarray(res.ids)
+        for i in range(B):
+            got = ids[i][ids[i] >= 0]
+            assert ((got >= L[i]) & (got <= R[i])).all(), name
+        rec = recall(ids, gt)
+        floor = 1.0 if name == "pre" else 0.5
+        assert rec >= floor, f"{name}: recall {rec}"
+    # BasicSearch must be exact-range like ours and get decent recall
+    rec_basic = recall(
+        np.asarray(baselines.basic_search(idx, q, L, R, k=10, ef=96).ids), gt
+    )
+    assert rec_basic >= 0.8
+
+
+def test_oracle_search_high_recall(small_index):
+    idx, rng = small_index
+    B = 8
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    L = np.full(B, 100, np.int32)
+    R = np.full(B, 355, np.int32)
+    gt, _ = idx.brute_force(q, L, R, k=10)
+    res = baselines.oracle_search(idx, q, L, R, k=10, ef=64)
+    assert recall(np.asarray(res.ids), gt) >= 0.9
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_property_search_never_out_of_range(seed):
+    rng = np.random.default_rng(seed)
+    n, d = 128, 8
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.standard_normal(n)
+    idx = RangeGraphIndex.build(
+        vectors, attrs, BuildConfig(m=6, ef_construction=16)
+    )
+    B = 8
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    L = rng.integers(0, n - 1, B).astype(np.int32)
+    R = (L + rng.integers(0, n - 1, B)).clip(max=n - 1).astype(np.int32)
+    res = idx.search_ranks(q, L, R, k=5, ef=16)
+    ids = np.asarray(res.ids)
+    for i in range(B):
+        got = ids[i][ids[i] >= 0]
+        assert ((got >= L[i]) & (got <= R[i])).all()
+        assert len(set(got.tolist())) == len(got)
+
+
+def test_multiattr_modes(small_index):
+    idx, rng = small_index
+    n = idx.n
+    attr2 = rng.uniform(0, 1, n).astype(np.float32)
+    B = 24
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    L = np.zeros(B, np.int32)
+    R = np.full(B, n // 2, np.int32)
+    lo2 = np.full(B, 0.2, np.float32)
+    hi2 = np.full(B, 0.8, np.float32)
+    gt, _ = multiattr.brute_force_multiattr(
+        idx, attr2, q, L, R, lo2, hi2, k=10
+    )
+    recs = {}
+    for mode in ("post", "in", "adaptive"):
+        res = multiattr.search_multiattr(
+            idx, attr2, q, L, R, lo2, hi2, k=10, ef=96, mode=mode
+        )
+        ids = np.asarray(res.ids)
+        ok = ids >= 0
+        # conjunctive predicates hold on every result
+        sel = ids[ok]
+        assert ((sel >= 0) & (sel <= n // 2)).all()
+        assert ((attr2[sel] >= 0.2) & (attr2[sel] <= 0.8)).all()
+        recs[mode] = recall(ids, gt)
+    assert recs["post"] >= 0.85
+    assert recs["adaptive"] >= 0.7
