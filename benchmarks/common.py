@@ -68,6 +68,20 @@ def make_workload(index: RangeGraphIndex, kind: str, n_queries=128,
     return Workload(kind, L, R, qv)
 
 
+def make_searcher(index: RangeGraphIndex, *, ef=64, expand_width=4,
+                  dist_impl="auto", skip_layers=True):
+    """Bind index + engine knobs into the ``search_fn(q, L, R, k)`` shape
+    that ``measure`` consumes."""
+
+    def search_fn(q, L, R, k):
+        return index.search_ranks(
+            q, L, R, k=k, ef=ef, expand_width=expand_width,
+            dist_impl=dist_impl, skip_layers=skip_layers,
+        )
+
+    return search_fn
+
+
 def measure(search_fn, wl: Workload, index, *, k=DEFAULT_K, warmup=True):
     """Returns dict(qps, recall, mean_dists). search_fn(q, L, R, k) -> res."""
     gt, _ = index.brute_force(wl.queries, wl.L, wl.R, k=k)

@@ -1,0 +1,163 @@
+"""Beam-search hot-path microbenchmark: fused vs reference expansion step.
+
+Two measurements, emitted to ``artifacts/BENCH_hotpath.json``:
+
+  * ``expansion_step`` — one beam-search hop in isolation at the acceptance
+    shape (B=64, n=100k, d=128 by default): the seed formulation (dense
+    ``bool[B, n]`` visited + XLA ``[B, M, d]`` gather + einsum) against the
+    fused one (packed uint32 bitset + ``ops.gather_dist``). On TPU the fused
+    side runs the Pallas gather-distance kernel; off-TPU it runs the XLA
+    reference distance with the packed bitset (pass ``--interpret`` to force
+    the kernel through the interpreter — orders of magnitude slower, only
+    useful as a smoke test).
+  * ``search_sweep`` — end-to-end ``search_ranks`` qps/recall over
+    ``expand_width`` in {1, 2, 4, 8} on a CPU-tractable index, giving future
+    PRs a perf trajectory.
+
+Usage: ``PYTHONPATH=src python benchmarks/hotpath.py [--no-sweep] [--b 64]
+[--n 100000] [--d 128] [--m 16] [--iters 50]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+import jax.numpy as jnp
+
+from common import DEFAULT_K, artifacts_dir, build_index, make_searcher, \
+    make_workload, measure
+from repro.core import bitset
+from repro.core.search import _pairdist
+from repro.kernels import ops
+
+
+def time_it(fn, *args, iters=50, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_expansion_step(B, n, d, M, iters, dist_impl):
+    """One hop: visited test+mark and neighbor distances for [B, M] ids."""
+    rng = np.random.default_rng(0)
+    vectors = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    nbr = jnp.asarray(rng.integers(0, n, (B, M)).astype(np.int32))
+
+    @jax.jit
+    def seed_step(visited, q, nbr):
+        nvalid = nbr >= 0
+        b = jnp.arange(B)[:, None]
+        seen = visited[b, jnp.maximum(nbr, 0)]
+        nvalid &= ~seen
+        visited = visited.at[b, jnp.maximum(nbr, 0)].max(nvalid)
+        nx = vectors[jnp.maximum(nbr, 0)]                  # [B, M, d] in HBM
+        nd = jnp.where(nvalid, _pairdist(q, nx, "l2"), jnp.inf)
+        return visited, nd
+
+    @jax.jit
+    def fused_step(bits, q, nbr):
+        bits, seen = bitset.test_and_set(bits, nbr, nbr >= 0)
+        nvalid = (nbr >= 0) & ~seen
+        nd = ops.gather_dist(
+            q, vectors, jnp.where(nvalid, nbr, -1), impl=dist_impl
+        )
+        return bits, nd
+
+    dense = jnp.zeros((B, n), bool)
+    bits = bitset.make(B, n)
+    seed_s = time_it(seed_step, dense, q, nbr, iters=iters)
+    fused_s = time_it(fused_step, bits, q, nbr, iters=iters)
+    return {
+        "seed_us": seed_s * 1e6,
+        "fused_us": fused_s * 1e6,
+        "speedup": seed_s / fused_s,
+        "visited_state_bytes": {
+            "dense": int(B * n),
+            "bitset": int(B * bitset.num_words(n) * 4),
+        },
+    }
+
+
+def bench_search_sweep(widths=(1, 2, 4, 8)):
+    index = build_index("wit-like")
+    wl = make_workload(index, "mixed", n_queries=128)
+    rows = []
+    for w in widths:
+        fn = make_searcher(index, ef=64, expand_width=w)
+        r = measure(fn, wl, index, k=DEFAULT_K)
+        rows.append({"expand_width": w, **{k: float(v) for k, v in r.items()}})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--b", type=int, default=64)
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--d", type=int, default=128)
+    ap.add_argument("--m", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the end-to-end expand_width sweep")
+    ap.add_argument("--interpret", action="store_true",
+                    help="force the Pallas kernel through the interpreter")
+    args = ap.parse_args(argv)
+
+    backend = jax.default_backend()
+    # resolve the backend the fused side will actually use so the artifact
+    # attributes the numbers correctly
+    dist_impl = "pallas" if (args.interpret or backend == "tpu") else "xla"
+    kernel_interpreted = args.interpret and backend != "tpu"
+
+    step = bench_expansion_step(
+        args.b, args.n, args.d, args.m, args.iters, dist_impl
+    )
+    print(
+        f"expansion step B={args.b} n={args.n} d={args.d} M={args.m}: "
+        f"seed {step['seed_us']:.1f}us  fused {step['fused_us']:.1f}us  "
+        f"({step['speedup']:.2f}x)"
+    )
+
+    sweep = None
+    if not args.no_sweep:
+        sweep = bench_search_sweep()
+        for row in sweep:
+            print(
+                f"expand_width={row['expand_width']}: "
+                f"qps={row['qps']:.1f} recall={row['recall']:.3f} "
+                f"mean_dists={row['mean_dists']:.0f}"
+            )
+
+    payload = {
+        "host": {
+            "backend": backend,
+            "device": str(jax.devices()[0]),
+            "kernel_interpreted": kernel_interpreted,
+        },
+        "config": {
+            "B": args.b, "n": args.n, "d": args.d, "M": args.m,
+            "iters": args.iters, "dist_impl": dist_impl,
+        },
+        "expansion_step": step,
+        "search_sweep": sweep,
+    }
+    out = os.path.join(artifacts_dir(), "BENCH_hotpath.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+from repro import compressio
 
 __all__ = ["save", "restore", "latest_step", "gc_old"]
 
@@ -55,7 +56,7 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3, extra=None):
     blob = msgpack.packb(
         {"sha256": hashlib.sha256(raw).hexdigest(), "payload": raw}
     )
-    comp = zstandard.ZstdCompressor(level=3).compress(blob)
+    comp = compressio.compress(blob, level=3)
     final = os.path.join(ckpt_dir, f"step_{step}.ckpt")
     tmp = final + ".tmp"
     with open(tmp, "wb") as f:
@@ -106,7 +107,7 @@ def restore(ckpt_dir: str, template, *, step: int | None = None,
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step}.ckpt")
     with open(path, "rb") as f:
-        blob = zstandard.ZstdDecompressor().decompress(f.read())
+        blob = compressio.decompress(f.read())
     outer = msgpack.unpackb(blob)
     raw = outer["payload"]
     if hashlib.sha256(raw).hexdigest() != outer["sha256"]:

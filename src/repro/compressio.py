@@ -1,0 +1,36 @@
+"""Blob compression with graceful degradation.
+
+Checkpoints and serialized indexes are zstd-compressed when the ``zstandard``
+package is available and fall back to stdlib ``zlib`` otherwise (this
+container does not ship zstd bindings). Reads auto-detect the codec from the
+frame magic, so artifacts written under one codec load under the other
+environment as long as the writer's codec is importable.
+"""
+from __future__ import annotations
+
+import zlib
+
+try:
+    import zstandard
+except ImportError:  # pragma: no cover - depends on the environment
+    zstandard = None
+
+__all__ = ["compress", "decompress"]
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def compress(data: bytes, level: int = 3) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(data)
+    return zlib.compress(data, level)
+
+
+def decompress(data: bytes) -> bytes:
+    if data[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "blob is zstd-compressed but 'zstandard' is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(data)
+    return zlib.decompress(data)

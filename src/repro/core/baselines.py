@@ -47,25 +47,34 @@ def prefilter(index: RangeGraphIndex, queries, L, R, *, k=10, **_):
     )
 
 
-def postfilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+def postfilter(
+    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+):
     return search_mod.search_filtered(
         jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
-        mode="post", ef=ef, k=k,
+        mode="post", ef=ef, k=k, expand_width=expand_width,
     )
 
 
-def infilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+def infilter(
+    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+):
     return search_mod.search_filtered(
         jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
-        mode="in", ef=ef, k=k,
+        mode="in", ef=ef, k=k, expand_width=expand_width,
     )
 
 
-def basic_search(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+def basic_search(
+    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+):
     """Per query: search every covering segment's elemental graph, merge.
 
     Queries are grouped by decomposition shape on the host; each segment
@@ -100,6 +109,7 @@ def basic_search(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
             use_hi = jnp.asarray(np.where(sel, hi, -1), jnp.int32)
             res = search_mod.search_fixed_layer(
                 vec, nbrs, q, use_lo, use_hi, layer=int(layer), ef=ef, k=k,
+                expand_width=expand_width,
             )
             selj = jnp.asarray(sel)
             ids_s = jnp.where(selj[:, None], res.ids, ids_s)
@@ -117,7 +127,10 @@ def basic_search(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
     )
 
 
-def super_postfilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
+def super_postfilter(
+    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+):
     """Smallest covering segment + post-filtering (SuperPostfiltering-style)."""
     q = jnp.asarray(queries, jnp.float32)
     B = q.shape[0]
@@ -147,12 +160,17 @@ def super_postfilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
         def filt(ids):
             return (ids >= Lj[:, None]) & (ids <= Rj[:, None])
 
-        def nbr_fn(u, _layer=int(layer)):
+        # nbr_fn sees the flattened [B*W] expansion frontier
+        expand_width = search_mod.effective_expand_width(expand_width, ef)
+        lo_w = search_mod.tile_frontier(use_lo, expand_width)
+        hi_w = search_mod.tile_frontier(use_hi, expand_width)
+
+        def nbr_fn(u, _layer=int(layer), _lo=lo_w, _hi=hi_w):
             row = nbrs[jnp.maximum(u, 0), _layer, :]
             ok = (
                 (row >= 0)
-                & (row >= use_lo[:, None])
-                & (row <= use_hi[:, None])
+                & (row >= _lo[:, None])
+                & (row <= _hi[:, None])
                 & (u >= 0)[:, None]
             )
             return jnp.where(ok, row, -1)
@@ -168,6 +186,7 @@ def super_postfilter(index: RangeGraphIndex, queries, L, R, *, k=10, ef=64):
         entries = jnp.where(okent, entries, -1)
         res = search_mod.beam_search(
             vec, q, entries, nbr_fn, ef=ef, k=k, result_filter_fn=filt,
+            expand_width=expand_width,
         )
         selj = jnp.asarray(sel)
         out_ids = jnp.where(selj[:, None], res.ids, out_ids)

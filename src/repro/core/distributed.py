@@ -89,6 +89,7 @@ def rfann_serve_step(
     m: int,
     ef: int,
     k: int,
+    expand_width: int = 4,
 ):
     """Batched distributed RFANN query under shard_map."""
 
@@ -113,7 +114,7 @@ def rfann_serve_step(
         Rl = jnp.where(empty, 0, Rl)
         res = search_mod.search_improvised(
             vec, nbr, q, Ll, Rl,
-            logn=logn, m_out=m, ef=ef, k=k,
+            logn=logn, m_out=m, ef=ef, k=k, expand_width=expand_width,
         )
         ids = jnp.where(
             (res.ids >= 0) & ~empty[:, None], res.ids + lo, -1
@@ -144,14 +145,14 @@ def rfann_serve_step(
     return fn(shard_vectors, shard_neighbors, shard_bounds, queries, L, R)
 
 
-def make_serve_jit(mesh: Mesh, *, logn, m, ef, k):
+def make_serve_jit(mesh: Mesh, *, logn, m, ef, k, expand_width=4):
     """jit wrapper with shardings bound — what the dry-run lowers."""
 
     @functools.partial(jax.jit, static_argnums=())
     def step(shard_vectors, shard_neighbors, shard_bounds, queries, L, R):
         return rfann_serve_step(
             shard_vectors, shard_neighbors, shard_bounds, queries, L, R,
-            mesh=mesh, logn=logn, m=m, ef=ef, k=k,
+            mesh=mesh, logn=logn, m=m, ef=ef, k=k, expand_width=expand_width,
         )
 
     return step

@@ -15,7 +15,7 @@ dedicated graph for query range ``[L, R]``:
 
 The CPU algorithm is a branchy O(m + log n) walk; here it becomes a gather of
 all candidate edges, a closed-form scan mask (``segment_tree.scan_mask``), a
-duplicate-suppressing double stable sort, and one top-m — branch-free and
+single duplicate-suppressing stable sort, and one top-m — branch-free and
 vmappable over the whole beam/batch. See DESIGN.md §2.
 """
 from __future__ import annotations
@@ -60,15 +60,16 @@ def select_edges(nbrs_u, u, L, R, *, logn, m_out, skip_layers=True):
     # Priority: earlier (upper) layer first, then slot order within the layer.
     prio = jnp.where(valid, jnp.arange(flat.shape[0], dtype=jnp.int32), _BIG)
 
-    # Deduplicate, keeping the best priority per neighbor id: stable sort by
-    # priority, then stable sort by id — ties now ordered by priority — and
-    # invalidate any entry equal to its predecessor.
-    order_p = jnp.argsort(prio, stable=True)
-    ids_p, prio_p = flat[order_p], prio[order_p]
-    sort_ids = jnp.where(prio_p == _BIG, _BIG, ids_p)  # invalids to the end
-    order_i = jnp.argsort(sort_ids, stable=True)
-    ids_i, prio_i = ids_p[order_i], prio_p[order_i]
-    dup = jnp.concatenate([jnp.array([False]), ids_i[1:] == ids_i[:-1]])
+    # Deduplicate, keeping the best priority per neighbor id, with ONE stable
+    # argsort: priority equals the flat position, so the array is already in
+    # priority order — a stable sort on (id, invalids->BIG) therefore orders
+    # equal ids by priority for free. Invalidate entries equal to their
+    # predecessor's key (all-BIG invalid runs self-suppress harmlessly).
+    key = jnp.where(valid, flat, _BIG)
+    order_i = jnp.argsort(key, stable=True)
+    key_i, prio_i = key[order_i], prio[order_i]
+    ids_i = flat[order_i]
+    dup = jnp.concatenate([jnp.array([False]), key_i[1:] == key_i[:-1]])
     prio_i = jnp.where(dup, _BIG, prio_i)
 
     # Top-m_out by priority.

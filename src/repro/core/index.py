@@ -19,7 +19,8 @@ import math
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+from repro import compressio
 
 from repro.core import build as build_mod
 from repro.core import search as search_mod
@@ -88,8 +89,13 @@ class RangeGraphIndex:
     # -- query ---------------------------------------------------------------
     def search_ranks(
         self, queries, L, R, *, k=10, ef=64, skip_layers=True, metric="l2",
+        expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
     ) -> search_mod.SearchResult:
-        """RFANN in rank space: per-query inclusive rank ranges [L, R]."""
+        """RFANN in rank space: per-query inclusive rank ranges [L, R].
+
+        expand_width: nodes expanded per query per beam iteration (static);
+        dist_impl: distance backend ("auto" | "pallas" | "xla").
+        """
         return search_mod.search_improvised(
             jnp.asarray(self.vectors),
             jnp.asarray(self.neighbors),
@@ -102,6 +108,8 @@ class RangeGraphIndex:
             k=k,
             skip_layers=skip_layers,
             metric=metric,
+            expand_width=expand_width,
+            dist_impl=dist_impl,
         )
 
     def search(self, queries, lo_val, hi_val, **kw) -> search_mod.SearchResult:
@@ -153,12 +161,12 @@ class RangeGraphIndex:
         digest = hashlib.sha256(raw).hexdigest()
         blob = msgpack.packb({"sha256": digest, "payload": raw})
         with open(path, "wb") as f:
-            f.write(zstandard.ZstdCompressor(level=3).compress(blob))
+            f.write(compressio.compress(blob, level=3))
 
     @classmethod
     def load(cls, path: str) -> "RangeGraphIndex":
         with open(path, "rb") as f:
-            blob = zstandard.ZstdDecompressor().decompress(f.read())
+            blob = compressio.decompress(f.read())
         outer = msgpack.unpackb(blob)
         raw = outer["payload"]
         if hashlib.sha256(raw).hexdigest() != outer["sha256"]:

@@ -28,20 +28,24 @@ __all__ = ["search_multiattr"]
 @functools.partial(
     jax.jit,
     static_argnames=("logn", "m_out", "ef", "k", "mode", "metric",
-                     "max_iters"),
+                     "max_iters", "expand_width"),
 )
 def _search_multiattr_jit(
     vectors, nbrs, attr2, queries, L, R, lo2, hi2, rng, *,
     logn, m_out, ef, k, mode, metric="l2", max_iters=None,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
 ):
     n = vectors.shape[0]
     entries = search_mod.range_entry_ids(L, jnp.minimum(R, n - 1), n)
     ok = (entries >= L[:, None]) & (entries <= R[:, None])
     entries = jnp.where(ok, entries, -1)
+    expand_width = search_mod.effective_expand_width(expand_width, ef)
+    Lw = search_mod.tile_frontier(L, expand_width)
+    Rw = search_mod.tile_frontier(R, expand_width)
 
     def nbr_fn(u):
         return edge_select.select_edges_batch(
-            nbrs, u, L, R, logn=logn, m_out=m_out, skip_layers=True
+            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=True
         )
 
     def filt(ids):
@@ -63,13 +67,14 @@ def _search_multiattr_jit(
     return search_mod.beam_search(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
         max_iters=max_iters, result_filter_fn=filt,
-        visit_prob_fn=visit_prob_fn, rng=rng,
+        visit_prob_fn=visit_prob_fn, rng=rng, expand_width=expand_width,
     )
 
 
 def search_multiattr(
     index: RangeGraphIndex, attr2, queries, L, R, lo2, hi2, *,
     k=10, ef=64, mode="adaptive", seed=0,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
 ):
     """Conjunctive RFANN query.
 
@@ -92,6 +97,7 @@ def search_multiattr(
         ef=ef,
         k=k,
         mode=mode,
+        expand_width=expand_width,
     )
 
 

@@ -1,24 +1,32 @@
-"""Batched greedy beam search engines.
+"""Batched greedy beam search engines (fused hot path).
 
 The paper's query phase is greedy beam search (HNSW-style dynamic list of
 size ``ef``) over a graph whose edges are improvised per query range
 (Algorithm 1). On TPU the priority-queue formulation becomes a fixed-shape
-lockstep loop:
+lockstep loop; this module is the performance-tuned engine (DESIGN.md §3):
 
   * per-query state: candidate list ``(ids, dists, visited)`` of size ``ef``
-    holding the best-so-far, a visited bitmap over the dataset, an active
-    flag;
-  * each iteration expands the best unvisited candidate of every active query
-    simultaneously, gathers its (improvised) out-edges, computes distances in
-    one batched op (the Pallas distance kernel on TPU), and merges with a
-    single ``top_k``;
+    holding the best-so-far, a *packed* ``uint32[B, ceil(n/32)]`` visited
+    bitset (``core/bitset.py``), an active flag;
+  * each iteration expands the top ``expand_width`` unvisited candidates of
+    every active query simultaneously; their edge selections run as ONE
+    batched call of shape ``[B*W]``, so per-iteration fixed costs (edge
+    selection, top-k merge) amortize over W expansions;
+  * neighbor distances come from the fused gather-distance kernel
+    (``kernels/gather_distance.py``) on TPU — no ``[B, M, d]`` HBM
+    intermediate — and from the XLA gather+einsum reference elsewhere;
   * termination (best unvisited worse than the worst of a full list) becomes
     a mask; finished queries coast.
 
 ``beam_search`` is generic over a ``nbr_fn`` so the same engine serves the
 improvised graph, single elemental graphs (index construction, BasicSearch,
 SuperPostfiltering), the root graph with post-/in-filtering, and the
-multi-attribute variant.
+multi-attribute variant. **nbr_fn contract**: it receives the *flattened*
+expansion frontier ``int32[B*W]`` (row ``b*W + w`` is query b's w-th
+expansion, ``-1`` for inactive slots) and must return ``int32[B*W, M]``.
+
+With ``expand_width=1`` the engine is bit-identical (ids and dists) to the
+reference implementation in ``core/search_ref.py``; tests enforce this.
 """
 from __future__ import annotations
 
@@ -28,17 +36,31 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import edge_select
+from repro.core import bitset, edge_select
+from repro.kernels import ops
 
 __all__ = [
     "SearchResult",
     "beam_search",
+    "effective_expand_width",
     "search_improvised",
     "search_fixed_layer",
     "search_filtered",
 ]
 
 _INF = jnp.float32(jnp.inf)
+
+DEFAULT_EXPAND_WIDTH = 4
+
+
+def effective_expand_width(expand_width: int, ef: int) -> int:
+    """The W beam_search will actually run: clamped to the ef-sized
+    candidate list. Every caller that tiles per-query state into a [B*W]
+    frontier for its nbr_fn MUST use this same value."""
+    w = int(expand_width)
+    if w < 1:
+        raise ValueError(f"expand_width must be >= 1, got {w}")
+    return min(w, ef)
 
 
 class SearchResult(NamedTuple):
@@ -51,7 +73,8 @@ class SearchResult(NamedTuple):
 def _pairdist(q, x, metric):
     """Distance between queries q[B, d] and points x[B, M, d] -> [B, M].
 
-    Inputs may be bf16 (the storage-dtype hillclimb); math is f32.
+    Inputs may be bf16 (the storage-dtype hillclimb); math is f32. Kept for
+    benchmarks/tests; the engine itself uses ``ops.gather_dist``.
     """
     q = q.astype(jnp.float32)
     x = x.astype(jnp.float32)
@@ -70,37 +93,47 @@ def beam_search(
     vectors: jnp.ndarray,          # f32[n, d]
     queries: jnp.ndarray,          # f32[B, d]
     entry_ids: jnp.ndarray,        # int32[B, E] (-1 for unused)
-    nbr_fn: Callable,              # int32[B] -> int32[B, M]
+    nbr_fn: Callable,              # int32[B*W] -> int32[B*W, M]
     *,
     ef: int,
     k: int,
+    expand_width: int = DEFAULT_EXPAND_WIDTH,
     max_iters: int | None = None,
     metric: str = "l2",
     result_filter_fn: Callable | None = None,
     visit_prob_fn: Callable | None = None,
     rng: jax.Array | None = None,
+    dist_impl: str = "auto",
 ) -> SearchResult:
     """Generic batched beam search. See module docstring.
 
-    result_filter_fn: optional ``ids[B,M] -> bool[B,M]``; when given, the
+    expand_width: number of unvisited candidates expanded per query per
+      iteration (static). 1 reproduces the reference engine bit-for-bit.
+    result_filter_fn: optional ``ids[B,K] -> bool[B,K]``; when given, the
       navigation list accepts everything but the *result* list only accepts
       ids passing the filter (multi-attribute post-filtering semantics).
-    visit_prob_fn: optional ``(ids[B,M], t[B]) -> p[B,M]`` probability of
+    visit_prob_fn: optional ``(ids[B,K], t[B]) -> p[B,K]`` probability of
       visiting an id that fails the result filter (the paper's §4
       generalization; p=1 is post-filtering, p=0 in-filtering). Requires rng.
+    dist_impl: "auto" | "pallas" | "xla" distance backend (see kernels/ops).
     """
     n, d = vectors.shape
     B = queries.shape[0]
+    W = effective_expand_width(expand_width, ef)
     if max_iters is None:
         max_iters = 4 * ef + 32
 
     two_lists = result_filter_fn is not None
 
+    def gdist(ids):
+        return ops.gather_dist(
+            queries, vectors, ids, metric=metric, impl=dist_impl
+        )
+
     def init_state():
         e = entry_ids
         valid = e >= 0
-        ex = vectors[jnp.maximum(e, 0)]
-        dists = jnp.where(valid, _pairdist(queries, ex, metric), _INF)
+        dists = gdist(jnp.where(valid, e, -1))
         E = e.shape[1]
         pad = ef - E
         cand_ids = jnp.concatenate(
@@ -108,8 +141,7 @@ def beam_search(
         )
         cand_dists = jnp.concatenate([dists, jnp.full((B, pad), _INF)], axis=1)
         cand_vis = jnp.zeros((B, ef), bool)
-        visited = jnp.zeros((B, n), bool)
-        visited = _mark(visited, e, valid)
+        visited, _ = bitset.test_and_set(bitset.make(B, n), e, valid)
         if two_lists:
             ok = result_filter_fn(jnp.maximum(e, 0)) & valid
             res_ids = jnp.concatenate(
@@ -130,10 +162,6 @@ def beam_search(
             jnp.int32(0),
         )
 
-    def _mark(visited, ids, valid):
-        b = jnp.arange(B)[:, None]
-        return visited.at[b, jnp.maximum(ids, 0)].max(valid)
-
     def cond(state):
         *_, active, _stats, _key, it = state
         return jnp.any(active) & (it < max_iters)
@@ -146,54 +174,64 @@ def beam_search(
         unvisited = jnp.where(
             cand_vis | (cand_ids < 0), _INF, cand_dists
         )
-        best_slot = jnp.argmin(unvisited, axis=1)
-        best_dist = jnp.take_along_axis(unvisited, best_slot[:, None], 1)[:, 0]
+        # top-W unvisited candidates; slot 0 is the argmin, so the classic
+        # termination test reads off the first column
+        neg_sel, slots = jax.lax.top_k(-unvisited, W)       # [B, W]
+        sel_dists = -neg_sel
+        best_dist = sel_dists[:, 0]
         worst = jnp.max(jnp.where(cand_ids >= 0, cand_dists, -_INF), axis=1)
         full = jnp.all(cand_ids >= 0, axis=1)
         progress = jnp.isfinite(best_dist) & (~full | (best_dist <= worst))
         active = active & progress
 
-        u = jnp.take_along_axis(cand_ids, best_slot[:, None], 1)[:, 0]
-        u = jnp.where(active, u, -1)
-        cand_vis = jnp.where(
-            active[:, None]
-            & (jnp.arange(ef)[None, :] == best_slot[:, None]),
-            True,
-            cand_vis,
-        )
-        n_hops = n_hops + active.astype(jnp.int32)
+        exp_ok = active[:, None] & jnp.isfinite(sel_dists)  # [B, W]
+        u = jnp.where(
+            exp_ok, jnp.take_along_axis(cand_ids, slots, 1), -1
+        )                                                   # [B, W]
+        rows = jnp.arange(B)[:, None]
+        cand_vis = cand_vis.at[rows, slots].max(exp_ok)
+        n_hops = n_hops + jnp.sum(exp_ok, axis=1, dtype=jnp.int32)
 
-        nbr = nbr_fn(u)                       # [B, M]
+        # ONE batched edge selection for the whole [B, W] frontier
+        nbr = nbr_fn(u.reshape(B * W))                      # [B*W, M]
         M = nbr.shape[1]
-        nvalid = (nbr >= 0) & active[:, None]
-        b = jnp.arange(B)[:, None]
-        seen = visited[b, jnp.maximum(nbr, 0)]
-        nvalid &= ~seen
+        nbr = nbr.reshape(B, W * M)
+        exp_rep = jnp.repeat(exp_ok, M, axis=1)             # [B, W*M]
+        pre_valid = (nbr >= 0) & exp_rep
 
         if two_lists:
             in_rng = result_filter_fn(jnp.maximum(nbr, 0))
             if visit_prob_fn is not None:
                 key, sub = jax.random.split(key)
                 p = visit_prob_fn(jnp.maximum(nbr, 0), t)
-                coin = jax.random.uniform(sub, (B, M))
+                coin = jax.random.uniform(sub, (B, W * M))
                 visit_out = coin < p
             else:
-                visit_out = jnp.ones((B, M), bool)  # post-filtering
-            nvalid &= in_rng | visit_out
-            # consecutive out-of-range counter follows the expanded node u
-            u_in = result_filter_fn(jnp.maximum(u, 0)[:, None])[:, 0]
-            u_out = ~u_in & (u >= 0)
-            t = jnp.where(active, jnp.where(u_out, t + 1, 0), t)
+                visit_out = jnp.ones((B, W * M), bool)  # post-filtering
+            pre_valid &= in_rng | visit_out
+            # consecutive out-of-range counter follows the expanded nodes
+            u_in = result_filter_fn(jnp.maximum(u, 0)) & exp_ok
+            any_exp = jnp.any(exp_ok, axis=1)
+            num_out = jnp.sum(exp_ok & ~u_in, axis=1, dtype=jnp.int32)
+            t = jnp.where(
+                any_exp,
+                jnp.where(jnp.any(u_in, axis=1), 0, t + num_out),
+                t,
+            )
 
-        visited = _mark(visited, nbr, nvalid)
-        nx = vectors[jnp.maximum(nbr, 0)]
-        ndist = jnp.where(nvalid, _pairdist(queries, nx, metric), _INF)
+        # packed visited: one test_and_set both reads and marks, and dedups
+        # the same neighbor arriving from two expansions in this hop
+        visited, seen = bitset.test_and_set(visited, nbr, pre_valid)
+        nvalid = pre_valid & ~seen
+
+        # fused gather+distance: no [B, W*M, d] intermediate on TPU
+        ndist = gdist(jnp.where(nvalid, nbr, -1))
         n_dists = n_dists + jnp.sum(nvalid, axis=1, dtype=jnp.int32)
 
         # merge into navigation list
         all_ids = jnp.concatenate([cand_ids, jnp.where(nvalid, nbr, -1)], 1)
         all_dists = jnp.concatenate([cand_dists, ndist], 1)
-        all_vis = jnp.concatenate([cand_vis, jnp.zeros((B, M), bool)], 1)
+        all_vis = jnp.concatenate([cand_vis, jnp.zeros((B, W * M), bool)], 1)
         _, idx = jax.lax.top_k(-all_dists, ef)
         cand_ids = jnp.take_along_axis(all_ids, idx, 1)
         cand_dists = jnp.take_along_axis(all_dists, idx, 1)
@@ -244,6 +282,11 @@ def range_entry_ids(L, R, n, num_entries=3):
     return jnp.where(dup, -1, sortd)
 
 
+def tile_frontier(x, expand_width):
+    """Repeat per-query values to the flattened [B*W] frontier layout."""
+    return jnp.repeat(x, expand_width, axis=0)
+
+
 # ---------------------------------------------------------------------------
 # Concrete searches
 # ---------------------------------------------------------------------------
@@ -251,39 +294,45 @@ def range_entry_ids(L, R, n, num_entries=3):
 @functools.partial(
     jax.jit,
     static_argnames=("logn", "m_out", "ef", "k", "skip_layers", "metric",
-                     "max_iters"),
+                     "max_iters", "expand_width", "dist_impl"),
 )
 def search_improvised(
     vectors, nbrs, queries, L, R, *, logn, m_out, ef, k,
     skip_layers=True, metric="l2", max_iters=None,
+    expand_width=DEFAULT_EXPAND_WIDTH, dist_impl="auto",
 ):
     """The paper's query path: beam search on the improvised dedicated graph.
 
     L, R: int32[B] per-query inclusive rank ranges.
     """
     n = vectors.shape[0]
+    expand_width = effective_expand_width(expand_width, ef)
     entries = range_entry_ids(L, jnp.minimum(R, n - 1), n)
     ok = (entries >= L[:, None]) & (entries <= R[:, None])
     entries = jnp.where(ok, entries, -1)
+    Lw = tile_frontier(L, expand_width)
+    Rw = tile_frontier(R, expand_width)
 
     def nbr_fn(u):
         return edge_select.select_edges_batch(
-            nbrs, u, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers
+            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=skip_layers
         )
 
     return beam_search(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
-        max_iters=max_iters,
+        max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("layer", "ef", "k", "metric", "max_iters"),
+    static_argnames=("layer", "ef", "k", "metric", "max_iters",
+                     "expand_width", "dist_impl"),
 )
 def search_fixed_layer(
     vectors, nbrs, queries, seg_lo, seg_hi, *, layer, ef, k,
-    metric="l2", max_iters=None,
+    metric="l2", max_iters=None, expand_width=DEFAULT_EXPAND_WIDTH,
+    dist_impl="auto",
 ):
     """Beam search on one elemental graph (segment ``[seg_lo, seg_hi]`` at
     ``layer``). Used during construction, and by BasicSearch /
@@ -299,25 +348,30 @@ def search_fixed_layer(
         & (entries <= hi_real[:, None])
     )
     entries = jnp.where(ok, entries, -1)
+    expand_width = effective_expand_width(expand_width, ef)
+    low = tile_frontier(seg_lo, expand_width)
+    hiw = tile_frontier(seg_hi, expand_width)
 
     def nbr_fn(u):
         row = nbrs[jnp.maximum(u, 0), layer, :]
-        ok = (row >= 0) & (row >= seg_lo[:, None]) & (row <= seg_hi[:, None])
+        ok = (row >= 0) & (row >= low[:, None]) & (row <= hiw[:, None])
         return jnp.where(ok & (u >= 0)[:, None], row, -1)
 
     return beam_search(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
-        max_iters=max_iters,
+        max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mode", "ef", "k", "metric", "max_iters"),
+    static_argnames=("mode", "ef", "k", "metric", "max_iters",
+                     "expand_width", "dist_impl"),
 )
 def search_filtered(
     vectors, nbrs, queries, L, R, *, mode, ef, k, metric="l2",
-    max_iters=None, rng=None,
+    max_iters=None, rng=None, expand_width=DEFAULT_EXPAND_WIDTH,
+    dist_impl="auto",
 ):
     """Post-/In-filtering baselines on the root elemental graph (layer 0).
 
@@ -331,16 +385,20 @@ def search_filtered(
     def filt(ids):
         return (ids >= L[:, None]) & (ids <= R[:, None])
 
+    expand_width = effective_expand_width(expand_width, ef)
+    Lw = tile_frontier(L, expand_width)
+    Rw = tile_frontier(R, expand_width)
+
     def nbr_fn(u):
         row = nbrs[jnp.maximum(u, 0), 0, :]
         ok = (row >= 0) & (u >= 0)[:, None]
         if mode == "in":
-            ok &= filt(row)
+            ok &= (row >= Lw[:, None]) & (row <= Rw[:, None])
         return jnp.where(ok, row, -1)
 
     return beam_search(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
-        max_iters=max_iters,
+        max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
         result_filter_fn=filt,
         rng=rng,
     )

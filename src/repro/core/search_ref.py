@@ -1,0 +1,187 @@
+"""Reference beam-search engine (the pre-fusion implementation).
+
+This is the original dense-state engine kept verbatim as a correctness
+oracle for ``core/search.py``: dense ``bool[B, n]`` visited map, exactly one
+node expanded per query per iteration, XLA gather + einsum distances. The
+fused engine with ``expand_width=1`` must reproduce its results bit-for-bit
+(ids and dists); tests/test_hotpath.py enforces that on real indexes.
+
+Do not use in production paths — it exists to pin semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.search import SearchResult
+
+__all__ = ["beam_search_reference"]
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _pairdist(q, x, metric):
+    """Distance between queries q[B, d] and points x[B, M, d] -> [B, M]."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if metric == "l2":
+        xx = jnp.sum(x * x, axis=-1)
+        qq = jnp.sum(q * q, axis=-1, keepdims=True)
+        xq = jnp.einsum("bd,bmd->bm", q, x)
+        return xx - 2.0 * xq + qq
+    if metric == "ip":
+        return -jnp.einsum("bd,bmd->bm", q, x)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def beam_search_reference(
+    vectors: jnp.ndarray,          # f32[n, d]
+    queries: jnp.ndarray,          # f32[B, d]
+    entry_ids: jnp.ndarray,        # int32[B, E] (-1 for unused)
+    nbr_fn: Callable,              # int32[B] -> int32[B, M]
+    *,
+    ef: int,
+    k: int,
+    max_iters: int | None = None,
+    metric: str = "l2",
+    result_filter_fn: Callable | None = None,
+    visit_prob_fn: Callable | None = None,
+    rng: jax.Array | None = None,
+) -> SearchResult:
+    """Single-expansion dense-visited beam search (seed semantics)."""
+    n, d = vectors.shape
+    B = queries.shape[0]
+    if max_iters is None:
+        max_iters = 4 * ef + 32
+
+    two_lists = result_filter_fn is not None
+
+    def _mark(visited, ids, valid):
+        b = jnp.arange(B)[:, None]
+        return visited.at[b, jnp.maximum(ids, 0)].max(valid)
+
+    def init_state():
+        e = entry_ids
+        valid = e >= 0
+        ex = vectors[jnp.maximum(e, 0)]
+        dists = jnp.where(valid, _pairdist(queries, ex, metric), _INF)
+        E = e.shape[1]
+        pad = ef - E
+        cand_ids = jnp.concatenate(
+            [jnp.where(valid, e, -1), jnp.full((B, pad), -1, jnp.int32)], axis=1
+        )
+        cand_dists = jnp.concatenate([dists, jnp.full((B, pad), _INF)], axis=1)
+        cand_vis = jnp.zeros((B, ef), bool)
+        visited = jnp.zeros((B, n), bool)
+        visited = _mark(visited, e, valid)
+        if two_lists:
+            ok = result_filter_fn(jnp.maximum(e, 0)) & valid
+            res_ids = jnp.concatenate(
+                [jnp.where(ok, e, -1), jnp.full((B, pad), -1, jnp.int32)], 1
+            )
+            res_dists = jnp.concatenate(
+                [jnp.where(ok, dists, _INF), jnp.full((B, pad), _INF)], 1
+            )
+        else:
+            res_ids = cand_ids
+            res_dists = cand_dists
+        t = jnp.zeros((B,), jnp.int32)  # consecutive out-of-range counter
+        stats = (jnp.zeros((B,), jnp.int32), jnp.sum(valid, 1, dtype=jnp.int32))
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        return (
+            cand_ids, cand_dists, cand_vis, visited,
+            res_ids, res_dists, t, jnp.ones((B,), bool), stats, key,
+            jnp.int32(0),
+        )
+
+    def cond(state):
+        *_, active, _stats, _key, it = state
+        return jnp.any(active) & (it < max_iters)
+
+    def body(state):
+        (cand_ids, cand_dists, cand_vis, visited,
+         res_ids, res_dists, t, active, stats, key, it) = state
+        n_hops, n_dists = stats
+
+        unvisited = jnp.where(
+            cand_vis | (cand_ids < 0), _INF, cand_dists
+        )
+        best_slot = jnp.argmin(unvisited, axis=1)
+        best_dist = jnp.take_along_axis(unvisited, best_slot[:, None], 1)[:, 0]
+        worst = jnp.max(jnp.where(cand_ids >= 0, cand_dists, -_INF), axis=1)
+        full = jnp.all(cand_ids >= 0, axis=1)
+        progress = jnp.isfinite(best_dist) & (~full | (best_dist <= worst))
+        active = active & progress
+
+        u = jnp.take_along_axis(cand_ids, best_slot[:, None], 1)[:, 0]
+        u = jnp.where(active, u, -1)
+        cand_vis = jnp.where(
+            active[:, None]
+            & (jnp.arange(ef)[None, :] == best_slot[:, None]),
+            True,
+            cand_vis,
+        )
+        n_hops = n_hops + active.astype(jnp.int32)
+
+        nbr = nbr_fn(u)                       # [B, M]
+        M = nbr.shape[1]
+        nvalid = (nbr >= 0) & active[:, None]
+        b = jnp.arange(B)[:, None]
+        seen = visited[b, jnp.maximum(nbr, 0)]
+        nvalid &= ~seen
+
+        if two_lists:
+            in_rng = result_filter_fn(jnp.maximum(nbr, 0))
+            if visit_prob_fn is not None:
+                key, sub = jax.random.split(key)
+                p = visit_prob_fn(jnp.maximum(nbr, 0), t)
+                coin = jax.random.uniform(sub, (B, M))
+                visit_out = coin < p
+            else:
+                visit_out = jnp.ones((B, M), bool)  # post-filtering
+            nvalid &= in_rng | visit_out
+            # consecutive out-of-range counter follows the expanded node u
+            u_in = result_filter_fn(jnp.maximum(u, 0)[:, None])[:, 0]
+            u_out = ~u_in & (u >= 0)
+            t = jnp.where(active, jnp.where(u_out, t + 1, 0), t)
+
+        visited = _mark(visited, nbr, nvalid)
+        nx = vectors[jnp.maximum(nbr, 0)]
+        ndist = jnp.where(nvalid, _pairdist(queries, nx, metric), _INF)
+        n_dists = n_dists + jnp.sum(nvalid, axis=1, dtype=jnp.int32)
+
+        # merge into navigation list
+        all_ids = jnp.concatenate([cand_ids, jnp.where(nvalid, nbr, -1)], 1)
+        all_dists = jnp.concatenate([cand_dists, ndist], 1)
+        all_vis = jnp.concatenate([cand_vis, jnp.zeros((B, M), bool)], 1)
+        _, idx = jax.lax.top_k(-all_dists, ef)
+        cand_ids = jnp.take_along_axis(all_ids, idx, 1)
+        cand_dists = jnp.take_along_axis(all_dists, idx, 1)
+        cand_vis = jnp.take_along_axis(all_vis, idx, 1)
+
+        if two_lists:
+            rvalid = nvalid & in_rng
+            r_ids = jnp.concatenate([res_ids, jnp.where(rvalid, nbr, -1)], 1)
+            r_dists = jnp.concatenate(
+                [res_dists, jnp.where(rvalid, ndist, _INF)], 1
+            )
+            _, ridx = jax.lax.top_k(-r_dists, ef)
+            res_ids = jnp.take_along_axis(r_ids, ridx, 1)
+            res_dists = jnp.take_along_axis(r_dists, ridx, 1)
+        else:
+            res_ids, res_dists = cand_ids, cand_dists
+
+        return (cand_ids, cand_dists, cand_vis, visited,
+                res_ids, res_dists, t, active, (n_hops, n_dists), key,
+                it + 1)
+
+    state = init_state()
+    state = jax.lax.while_loop(cond, body, state)
+    (_, _, _, _, res_ids, res_dists, _, _, stats, _, _) = state
+    _, idx = jax.lax.top_k(-res_dists, k)
+    out_ids = jnp.take_along_axis(res_ids, idx, 1)
+    out_dists = jnp.take_along_axis(res_dists, idx, 1)
+    out_ids = jnp.where(jnp.isfinite(out_dists), out_ids, -1)
+    return SearchResult(out_ids, out_dists, stats[0], stats[1])

@@ -15,9 +15,10 @@ import jax
 
 from repro.kernels import distance as _distance
 from repro.kernels import flash_attention as _flash
+from repro.kernels import gather_distance as _gather
 from repro.kernels import ref as _ref
 
-__all__ = ["pairwise_dist", "flash_attention", "default_impl"]
+__all__ = ["pairwise_dist", "gather_dist", "flash_attention", "default_impl"]
 
 
 def default_impl() -> str:
@@ -35,6 +36,21 @@ def pairwise_dist(q, x, *, metric="l2", impl="auto", **block_kw):
         return _ref.pairwise_dist(q, x, metric=metric)
     return _distance.pairwise_dist_kernel_call(
         q, x, metric=metric, interpret=_interpret(), **block_kw
+    )
+
+
+def gather_dist(q, table, ids, *, metric="l2", impl="auto", **block_kw):
+    """Fused gather + masked distance for the beam-search hop.
+
+    "pallas" runs the Mosaic kernel (no [B, M, d] intermediate); "xla" is the
+    gather+einsum reference, which is also what "auto" picks off-TPU.
+    """
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "xla":
+        return _ref.gather_dist(q, table, ids, metric=metric)
+    return _gather.gather_distance_kernel_call(
+        q, table, ids, metric=metric, interpret=_interpret(), **block_kw
     )
 
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pairwise_dist", "attention"]
+__all__ = ["pairwise_dist", "gather_dist", "attention"]
 
 
 def pairwise_dist(q, x, metric="l2"):
@@ -24,6 +24,27 @@ def pairwise_dist(q, x, metric="l2"):
     qq = jnp.sum(q * q, axis=1, keepdims=True)
     xx = jnp.sum(x * x, axis=1)
     return qq - 2.0 * dot + xx[None, :]
+
+
+def gather_dist(q, table, ids, metric="l2"):
+    """q[B, d], table[n, d], ids int32[B, M] (-1 masked) -> f32[B, M].
+
+    Distance from query b to table[ids[b, j]]; +inf where ids < 0. This is
+    the semantic contract of the fused gather-distance kernel; on non-TPU
+    backends it is also the production path (XLA gather + einsum).
+    """
+    q = q.astype(jnp.float32)
+    x = table[jnp.maximum(ids, 0)].astype(jnp.float32)  # [B, M, d]
+    if metric == "l2":
+        xx = jnp.sum(x * x, axis=-1)
+        qq = jnp.sum(q * q, axis=-1, keepdims=True)
+        xq = jnp.einsum("bd,bmd->bm", q, x)
+        d = xx - 2.0 * xq + qq
+    elif metric == "ip":
+        d = -jnp.einsum("bd,bmd->bm", q, x)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(ids < 0, jnp.inf, d)
 
 
 def attention(

@@ -36,12 +36,14 @@ class Result:
 class ServingEngine:
     def __init__(
         self, index: RangeGraphIndex, *, ef: int = 64, max_batch: int = 64,
-        k_bucket: int = 10,
+        k_bucket: int = 10, expand_width: int = 4, dist_impl: str = "auto",
     ):
         self.index = index
         self.ef = ef
         self.max_batch = max_batch
         self.k_bucket = k_bucket
+        self.expand_width = expand_width
+        self.dist_impl = dist_impl
         self._queue: list[Request] = []
         self.stats = {"served": 0, "batches": 0, "wall_s": 0.0}
 
@@ -65,7 +67,10 @@ class ServingEngine:
         hi = np.array([r.hi for r in batch] + [batch[0].hi] * pad)
         k = max(max(r.k for r in batch), self.k_bucket)
         L, R = self.index.ranks_of(lo, hi)
-        res = self.index.search_ranks(q, L, R, k=k, ef=self.ef)
+        res = self.index.search_ranks(
+            q, L, R, k=k, ef=self.ef, expand_width=self.expand_width,
+            dist_impl=self.dist_impl,
+        )
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         orig = self.index.original_ids(ids)

@@ -1,0 +1,97 @@
+"""Hypothesis compatibility shim for the property tests.
+
+When ``hypothesis`` is installed the real library is used unchanged. When it
+is absent (this container does not ship it) a minimal deterministic fallback
+runs the same oracle checks over a fixed seed grid: ``@given`` re-runs the
+test body ``min(max_examples, 25)`` times, drawing values from a seeded
+``numpy`` Generator. Only the API surface the tests use is implemented
+(``st.integers``, ``st.data``, positional/keyword ``@given``, ``@settings``).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    _MAX_FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def example_from(self, rng):
+            return self._draw_fn(rng)
+
+    class _Data:
+        """Stand-in for hypothesis' interactive ``data()`` object."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.example_from(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _Data(rng))
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # like hypothesis, drawn positionals fill the *last* parameter
+            # slots; bind them by name so pytest fixtures (passed as
+            # keywords) can occupy the leading slots without collision
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            pos_names = []
+            if arg_strategies:
+                pos_names = [p.name for p in params[-len(arg_strategies):]]
+                params = params[: -len(arg_strategies)]
+            params = [p for p in params if p.name not in kw_strategies]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(
+                    getattr(wrapper, "_max_examples", 20),
+                    _MAX_FALLBACK_EXAMPLES,
+                )
+                for example in range(n):
+                    rng = _np.random.default_rng(0xC0FFEE + 7919 * example)
+                    drawn = {
+                        name: s.example_from(rng)
+                        for name, s in zip(pos_names, arg_strategies)
+                    }
+                    kdrawn = {
+                        k: s.example_from(rng)
+                        for k, s in kw_strategies.items()
+                    }
+                    fn(*args, **kwargs, **drawn, **kdrawn)
+
+            # hide drawn parameters from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco

@@ -1,6 +1,6 @@
 """Vectorized Algorithm 1 must match the literal paper transcription."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import edge_select
 

@@ -1,6 +1,6 @@
 """RNG pruning invariants (paper Def. 2.1)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import rng as rng_mod
 

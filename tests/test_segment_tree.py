@@ -1,7 +1,7 @@
 """Property tests for the closed-form segment-tree math."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import segment_tree as sgt
 

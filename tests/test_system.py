@@ -1,7 +1,7 @@
 """End-to-end behaviour tests for the iRangeGraph system."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import BuildConfig, RangeGraphIndex, recall
 from repro.core import baselines, multiattr
