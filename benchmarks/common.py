@@ -69,14 +69,15 @@ def make_workload(index: RangeGraphIndex, kind: str, n_queries=128,
 
 
 def make_searcher(index: RangeGraphIndex, *, ef=64, expand_width=4,
-                  dist_impl="auto", skip_layers=True):
+                  dist_impl="auto", edge_impl="auto", skip_layers=True):
     """Bind index + engine knobs into the ``search_fn(q, L, R, k)`` shape
     that ``measure`` consumes."""
 
     def search_fn(q, L, R, k):
         return index.search_ranks(
             q, L, R, k=k, ef=ef, expand_width=expand_width,
-            dist_impl=dist_impl, skip_layers=skip_layers,
+            dist_impl=dist_impl, edge_impl=edge_impl,
+            skip_layers=skip_layers,
         )
 
     return search_fn

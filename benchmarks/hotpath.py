@@ -1,6 +1,6 @@
-"""Beam-search hot-path microbenchmark: fused vs reference expansion step.
+"""Beam-search hot-path microbenchmark: fused vs reference hop pieces.
 
-Two measurements, emitted to ``artifacts/BENCH_hotpath.json``:
+Three measurements, emitted to ``artifacts/BENCH_hotpath.json``:
 
   * ``expansion_step`` — one beam-search hop in isolation at the acceptance
     shape (B=64, n=100k, d=128 by default): the seed formulation (dense
@@ -10,12 +10,21 @@ Two measurements, emitted to ``artifacts/BENCH_hotpath.json``:
     reference distance with the packed bitset (pass ``--interpret`` to force
     the kernel through the interpreter — orders of magnitude slower, only
     useful as a smoke test).
+  * ``edge_select_step`` — one batched edge improvisation for a [B*W]
+    frontier at the same shape: the historical stable-argsort formulation
+    against the sort-free one (equality-matrix dedup + masked argmin top-m,
+    ``kernels/ref.py::select_edges`` / the Pallas edge-selection kernel on
+    TPU).
   * ``search_sweep`` — end-to-end ``search_ranks`` qps/recall over
-    ``expand_width`` in {1, 2, 4, 8} on a CPU-tractable index, giving future
-    PRs a perf trajectory.
+    ``expand_width`` in {1, 2, 4, 8} and over ``edge_impl`` backends on a
+    CPU-tractable index, giving future PRs a perf trajectory.
 
 Usage: ``PYTHONPATH=src python benchmarks/hotpath.py [--no-sweep] [--b 64]
-[--n 100000] [--d 128] [--m 16] [--iters 50]``
+[--n 100000] [--d 128] [--m 16] [--iters 50] [--smoke]``
+
+``--smoke`` shrinks every shape and iteration count to a seconds-long CI
+pass that still exercises all three measurements (shape regressions in the
+hot path fail loudly, numbers are meaningless).
 """
 from __future__ import annotations
 
@@ -35,6 +44,7 @@ import jax.numpy as jnp
 from common import DEFAULT_K, artifacts_dir, build_index, make_searcher, \
     make_workload, measure
 from repro.core import bitset
+from repro.core import edge_select as edge_select_mod
 from repro.core.search import _pairdist
 from repro.kernels import ops
 
@@ -91,14 +101,79 @@ def bench_expansion_step(B, n, d, M, iters, dist_impl):
     }
 
 
-def bench_search_sweep(widths=(1, 2, 4, 8)):
-    index = build_index("wit-like")
-    wl = make_workload(index, "mixed", n_queries=128)
+def bench_edge_select(B, n, m, iters, edge_impl):
+    """One batched edge improvisation for a [B*W] frontier: the historical
+    argsort formulation vs the sort-free one (the half of the hop PR 2
+    fuses). Ids are bit-identical; only the formulation changes."""
+    rng = np.random.default_rng(1)
+    logn = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    layers = logn + 1
+    # synthetic but structurally valid table: edges stay in-segment
+    base = rng.integers(0, n, (n, layers, m)).astype(np.int32)
+    u_ids = np.arange(n, dtype=np.int32)[:, None, None]
+    shift = (logn - np.arange(layers, dtype=np.int32))[None, :, None]
+    seg_lo = (u_ids >> shift) << shift
+    seg_size = (1 << shift)
+    nbrs = np.minimum(seg_lo + base % seg_size, n - 1).astype(np.int32)
+    nbrs[rng.random(nbrs.shape) < 0.15] = -1
+
+    F = B * 4  # the flattened [B*W] frontier at the default expand_width
+    us = jnp.asarray(rng.integers(0, n, F).astype(np.int32))
+    L = jnp.asarray(rng.integers(0, n // 2, F).astype(np.int32))
+    R = jnp.asarray((np.asarray(L) + n // 2 - 1).astype(np.int32))
+    nbrs = jnp.asarray(nbrs)
+
+    @jax.jit
+    def argsort_step(us, L, R):
+        return edge_select_mod.select_edges_batch(
+            nbrs, us, L, R, logn=logn, m_out=m
+        )
+
+    @jax.jit
+    def sortfree_step(us, L, R):
+        return ops.select_edges(
+            nbrs, us, L, R, logn=logn, m_out=m, impl=edge_impl
+        )
+
+    # sanity: formulations must agree before we time them
+    a = np.asarray(argsort_step(us, L, R))
+    b = np.asarray(sortfree_step(us, L, R))
+    assert np.array_equal(a, b), "edge-selection formulations diverged"
+
+    argsort_s = time_it(argsort_step, us, L, R, iters=iters)
+    sortfree_s = time_it(sortfree_step, us, L, R, iters=iters)
+    return {
+        "frontier": int(F),
+        "K": int(layers * m),
+        "logn": int(logn),
+        "argsort_us": argsort_s * 1e6,
+        "sortfree_us": sortfree_s * 1e6,
+        "speedup": argsort_s / sortfree_s,
+        "edge_impl": edge_impl,
+    }
+
+
+def bench_search_sweep(widths=(1, 2, 4, 8), edge_impls=("argsort", "xla"),
+                      dataset="wit-like", n_queries=128):
+    index = build_index(dataset)
+    wl = make_workload(index, "mixed", n_queries=n_queries)
+    auto_edge = ops.default_impl("edge")
     rows = []
     for w in widths:
         fn = make_searcher(index, ef=64, expand_width=w)
         r = measure(fn, wl, index, k=DEFAULT_K)
-        rows.append({"expand_width": w, **{k: float(v) for k, v in r.items()}})
+        # label the resolved backend so rows are self-describing
+        rows.append({"expand_width": w, "edge_impl": auto_edge,
+                     **{k: float(v) for k, v in r.items()}})
+    for impl in edge_impls:
+        if impl == auto_edge:
+            continue  # already measured as the width-4 auto row
+        fn = make_searcher(index, ef=64, expand_width=4, edge_impl=impl)
+        r = measure(fn, wl, index, k=DEFAULT_K)
+        rows.append({
+            "expand_width": 4, "edge_impl": impl,
+            **{k: float(v) for k, v in r.items()},
+        })
     return rows
 
 
@@ -113,12 +188,20 @@ def main(argv=None):
                     help="skip the end-to-end expand_width sweep")
     ap.add_argument("--interpret", action="store_true",
                     help="force the Pallas kernel through the interpreter")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few iters: a CI regression probe "
+                         "for hot-path shapes, not a measurement")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.b, args.n, args.d, args.m = 8, 4096, 32, 8
+        args.iters = 3
 
     backend = jax.default_backend()
     # resolve the backend the fused side will actually use so the artifact
     # attributes the numbers correctly
     dist_impl = "pallas" if (args.interpret or backend == "tpu") else "xla"
+    edge_impl = "pallas" if (args.interpret or backend == "tpu") else "xla"
     kernel_interpreted = args.interpret and backend != "tpu"
 
     step = bench_expansion_step(
@@ -130,12 +213,27 @@ def main(argv=None):
         f"({step['speedup']:.2f}x)"
     )
 
+    edge = bench_edge_select(args.b, args.n, args.m, args.iters, edge_impl)
+    print(
+        f"edge select F={edge['frontier']} K={edge['K']}: "
+        f"argsort {edge['argsort_us']:.1f}us  "
+        f"sort-free {edge['sortfree_us']:.1f}us  ({edge['speedup']:.2f}x)"
+    )
+
     sweep = None
     if not args.no_sweep:
-        sweep = bench_search_sweep()
+        if args.smoke:
+            sweep = bench_search_sweep(
+                widths=(1, 4), edge_impls=("argsort", "xla"),
+                dataset="ytaudio-like", n_queries=16,
+            )
+        else:
+            sweep = bench_search_sweep()
         for row in sweep:
+            tag = f" edge_impl={row['edge_impl']}" if "edge_impl" in row \
+                else ""
             print(
-                f"expand_width={row['expand_width']}: "
+                f"expand_width={row['expand_width']}{tag}: "
                 f"qps={row['qps']:.1f} recall={row['recall']:.3f} "
                 f"mean_dists={row['mean_dists']:.0f}"
             )
@@ -145,15 +243,20 @@ def main(argv=None):
             "backend": backend,
             "device": str(jax.devices()[0]),
             "kernel_interpreted": kernel_interpreted,
+            "smoke": args.smoke,
         },
         "config": {
             "B": args.b, "n": args.n, "d": args.d, "M": args.m,
             "iters": args.iters, "dist_impl": dist_impl,
+            "edge_impl": edge_impl,
         },
         "expansion_step": step,
+        "edge_select_step": edge,
         "search_sweep": sweep,
     }
-    out = os.path.join(artifacts_dir(), "BENCH_hotpath.json")
+    # smoke numbers are meaningless; never clobber the real perf record
+    name = "BENCH_hotpath_smoke.json" if args.smoke else "BENCH_hotpath.json"
+    out = os.path.join(artifacts_dir(), name)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
     print("wrote", out)

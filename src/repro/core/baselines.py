@@ -49,31 +49,36 @@ def prefilter(index: RangeGraphIndex, queries, L, R, *, k=10, **_):
 
 def postfilter(
     index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+    edge_impl="auto",
 ):
     return search_mod.search_filtered(
         jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
         mode="post", ef=ef, k=k, expand_width=expand_width,
+        dist_impl=dist_impl, edge_impl=edge_impl,
     )
 
 
 def infilter(
     index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+    edge_impl="auto",
 ):
     return search_mod.search_filtered(
         jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
         mode="in", ef=ef, k=k, expand_width=expand_width,
+        dist_impl=dist_impl, edge_impl=edge_impl,
     )
 
 
 def basic_search(
     index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+    edge_impl="auto",
 ):
     """Per query: search every covering segment's elemental graph, merge.
 
@@ -109,7 +114,8 @@ def basic_search(
             use_hi = jnp.asarray(np.where(sel, hi, -1), jnp.int32)
             res = search_mod.search_fixed_layer(
                 vec, nbrs, q, use_lo, use_hi, layer=int(layer), ef=ef, k=k,
-                expand_width=expand_width,
+                expand_width=expand_width, dist_impl=dist_impl,
+                edge_impl=edge_impl,
             )
             selj = jnp.asarray(sel)
             ids_s = jnp.where(selj[:, None], res.ids, ids_s)
@@ -129,7 +135,8 @@ def basic_search(
 
 def super_postfilter(
     index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+    edge_impl="auto",
 ):
     """Smallest covering segment + post-filtering (SuperPostfiltering-style)."""
     q = jnp.asarray(queries, jnp.float32)
@@ -186,7 +193,8 @@ def super_postfilter(
         entries = jnp.where(okent, entries, -1)
         res = search_mod.beam_search(
             vec, q, entries, nbr_fn, ef=ef, k=k, result_filter_fn=filt,
-            expand_width=expand_width,
+            expand_width=expand_width, dist_impl=dist_impl,
+            edge_impl=edge_impl,
         )
         selj = jnp.asarray(sel)
         out_ids = jnp.where(selj[:, None], res.ids, out_ids)

@@ -79,8 +79,8 @@ def _reverse_pass(nbrs_lay: np.ndarray, vectors, seg_of, cfg: BuildConfig):
     cand[vs[keep], m + pos[keep]] = us[keep]
     out = np.empty((n, m), np.int32)
     vecs = np.asarray(vectors)
-    for s in range(0, n, 4096):
-        e = min(n, s + 4096)
+    for s in range(0, n, cfg.chunk):
+        e = min(n, s + cfg.chunk)
         ids = jnp.asarray(cand[s:e])
         cvec = jnp.asarray(vecs[np.maximum(cand[s:e], 0)])
         u_vec = jnp.asarray(vecs[s:e])

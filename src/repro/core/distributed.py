@@ -90,6 +90,8 @@ def rfann_serve_step(
     ef: int,
     k: int,
     expand_width: int = 4,
+    dist_impl: str = "auto",
+    edge_impl: str = "auto",
 ):
     """Batched distributed RFANN query under shard_map."""
 
@@ -115,6 +117,7 @@ def rfann_serve_step(
         res = search_mod.search_improvised(
             vec, nbr, q, Ll, Rl,
             logn=logn, m_out=m, ef=ef, k=k, expand_width=expand_width,
+            dist_impl=dist_impl, edge_impl=edge_impl,
         )
         ids = jnp.where(
             (res.ids >= 0) & ~empty[:, None], res.ids + lo, -1
@@ -145,7 +148,8 @@ def rfann_serve_step(
     return fn(shard_vectors, shard_neighbors, shard_bounds, queries, L, R)
 
 
-def make_serve_jit(mesh: Mesh, *, logn, m, ef, k, expand_width=4):
+def make_serve_jit(mesh: Mesh, *, logn, m, ef, k, expand_width=4,
+                   dist_impl="auto", edge_impl="auto"):
     """jit wrapper with shardings bound — what the dry-run lowers."""
 
     @functools.partial(jax.jit, static_argnums=())
@@ -153,6 +157,7 @@ def make_serve_jit(mesh: Mesh, *, logn, m, ef, k, expand_width=4):
         return rfann_serve_step(
             shard_vectors, shard_neighbors, shard_bounds, queries, L, R,
             mesh=mesh, logn=logn, m=m, ef=ef, k=k, expand_width=expand_width,
+            dist_impl=dist_impl, edge_impl=edge_impl,
         )
 
     return step

@@ -16,7 +16,15 @@ dedicated graph for query range ``[L, R]``:
 The CPU algorithm is a branchy O(m + log n) walk; here it becomes a gather of
 all candidate edges, a closed-form scan mask (``segment_tree.scan_mask``), a
 single duplicate-suppressing stable sort, and one top-m — branch-free and
-vmappable over the whole beam/batch. See DESIGN.md §2.
+vmappable over the whole beam/batch.
+
+This module is the *historical argsort formulation*, kept as (a) the
+regression baseline for ``benchmarks/hotpath.py`` and (b) — together with
+``select_edges_reference``, the literal Algorithm 1 transcription — the
+correctness oracle for the production sort-free paths. The hot path now
+dispatches through ``kernels/ops.py::select_edges`` (Pallas kernel on TPU,
+sort-free jnp elsewhere); all formulations return bit-identical ids. See
+DESIGN.md §2.
 """
 from __future__ import annotations
 
@@ -29,7 +37,9 @@ from repro.core import segment_tree
 
 __all__ = ["select_edges", "select_edges_batch", "select_edges_reference"]
 
-_BIG = jnp.int32(2**30)
+# plain int so importing this module inside a jit trace can never capture a
+# tracer in module state; jnp ops promote it to int32
+_BIG = 2**30
 
 
 @functools.partial(jax.jit, static_argnames=("logn", "m_out", "skip_layers"))

@@ -90,11 +90,13 @@ class RangeGraphIndex:
     def search_ranks(
         self, queries, L, R, *, k=10, ef=64, skip_layers=True, metric="l2",
         expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+        edge_impl="auto",
     ) -> search_mod.SearchResult:
         """RFANN in rank space: per-query inclusive rank ranges [L, R].
 
         expand_width: nodes expanded per query per beam iteration (static);
-        dist_impl: distance backend ("auto" | "pallas" | "xla").
+        dist_impl: distance backend ("auto" | "pallas" | "xla");
+        edge_impl: edge-selection backend (same set, plus "argsort").
         """
         return search_mod.search_improvised(
             jnp.asarray(self.vectors),
@@ -110,6 +112,7 @@ class RangeGraphIndex:
             metric=metric,
             expand_width=expand_width,
             dist_impl=dist_impl,
+            edge_impl=edge_impl,
         )
 
     def search(self, queries, lo_val, hi_val, **kw) -> search_mod.SearchResult:

@@ -18,8 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import edge_select
 from repro.core import search as search_mod
+from repro.kernels import ops
 from repro.core.index import RangeGraphIndex
 
 __all__ = ["search_multiattr"]
@@ -28,12 +28,13 @@ __all__ = ["search_multiattr"]
 @functools.partial(
     jax.jit,
     static_argnames=("logn", "m_out", "ef", "k", "mode", "metric",
-                     "max_iters", "expand_width"),
+                     "max_iters", "expand_width", "dist_impl", "edge_impl"),
 )
 def _search_multiattr_jit(
     vectors, nbrs, attr2, queries, L, R, lo2, hi2, rng, *,
     logn, m_out, ef, k, mode, metric="l2", max_iters=None,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+    edge_impl="auto",
 ):
     n = vectors.shape[0]
     entries = search_mod.range_entry_ids(L, jnp.minimum(R, n - 1), n)
@@ -44,8 +45,9 @@ def _search_multiattr_jit(
     Rw = search_mod.tile_frontier(R, expand_width)
 
     def nbr_fn(u):
-        return edge_select.select_edges_batch(
-            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=True
+        return ops.select_edges(
+            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=True,
+            impl=edge_impl,
         )
 
     def filt(ids):
@@ -68,19 +70,22 @@ def _search_multiattr_jit(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
         max_iters=max_iters, result_filter_fn=filt,
         visit_prob_fn=visit_prob_fn, rng=rng, expand_width=expand_width,
+        dist_impl=dist_impl, edge_impl=edge_impl,
     )
 
 
 def search_multiattr(
     index: RangeGraphIndex, attr2, queries, L, R, lo2, hi2, *,
     k=10, ef=64, mode="adaptive", seed=0,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH,
+    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+    edge_impl="auto",
 ):
     """Conjunctive RFANN query.
 
     attr2: second attribute values in RANK-of-A1 order (i.e. aligned with
       ``index.vectors``); lo2/hi2: per-query inclusive value ranges on attr2.
     mode: "post" | "in" | "adaptive" (= iRangeGraph+'s p = exp(-t)).
+    dist_impl / edge_impl: kernel backends (see kernels/ops).
     """
     return _search_multiattr_jit(
         jnp.asarray(index.vectors),
@@ -98,6 +103,8 @@ def search_multiattr(
         k=k,
         mode=mode,
         expand_width=expand_width,
+        dist_impl=dist_impl,
+        edge_impl=edge_impl,
     )
 
 

@@ -15,6 +15,9 @@ lockstep loop; this module is the performance-tuned engine (DESIGN.md §3):
   * neighbor distances come from the fused gather-distance kernel
     (``kernels/gather_distance.py``) on TPU — no ``[B, M, d]`` HBM
     intermediate — and from the XLA gather+einsum reference elsewhere;
+  * edge improvisation dispatches through ``kernels/ops.py::select_edges``
+    (``edge_impl`` knob): the Pallas edge-selection kernel on TPU, the
+    sort-free jnp formulation elsewhere — bit-identical ids either way;
   * termination (best unvisited worse than the worst of a full list) becomes
     a mask; finished queries coast.
 
@@ -36,7 +39,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitset, edge_select
+from repro.core import bitset
 from repro.kernels import ops
 
 __all__ = [
@@ -104,6 +107,7 @@ def beam_search(
     visit_prob_fn: Callable | None = None,
     rng: jax.Array | None = None,
     dist_impl: str = "auto",
+    edge_impl: str = "auto",
 ) -> SearchResult:
     """Generic batched beam search. See module docstring.
 
@@ -116,7 +120,13 @@ def beam_search(
       visiting an id that fails the result filter (the paper's §4
       generalization; p=1 is post-filtering, p=0 in-filtering). Requires rng.
     dist_impl: "auto" | "pallas" | "xla" distance backend (see kernels/ops).
+    edge_impl: edge-selection backend, same value set plus "argsort". The
+      generic engine performs no edge selection itself (``nbr_fn`` arrives
+      pre-bound), but the knob lives in the engine signature so every
+      wrapper forwards one uniform backend set; concrete searches bind it
+      into their ``nbr_fn`` via ``ops.select_edges``.
     """
+    del edge_impl  # consumed by the concrete searches' nbr_fn closures
     n, d = vectors.shape
     B = queries.shape[0]
     W = effective_expand_width(expand_width, ef)
@@ -294,12 +304,12 @@ def tile_frontier(x, expand_width):
 @functools.partial(
     jax.jit,
     static_argnames=("logn", "m_out", "ef", "k", "skip_layers", "metric",
-                     "max_iters", "expand_width", "dist_impl"),
+                     "max_iters", "expand_width", "dist_impl", "edge_impl"),
 )
 def search_improvised(
     vectors, nbrs, queries, L, R, *, logn, m_out, ef, k,
     skip_layers=True, metric="l2", max_iters=None,
-    expand_width=DEFAULT_EXPAND_WIDTH, dist_impl="auto",
+    expand_width=DEFAULT_EXPAND_WIDTH, dist_impl="auto", edge_impl="auto",
 ):
     """The paper's query path: beam search on the improvised dedicated graph.
 
@@ -314,29 +324,33 @@ def search_improvised(
     Rw = tile_frontier(R, expand_width)
 
     def nbr_fn(u):
-        return edge_select.select_edges_batch(
-            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=skip_layers
+        return ops.select_edges(
+            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=skip_layers,
+            impl=edge_impl,
         )
 
     return beam_search(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
         max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("layer", "ef", "k", "metric", "max_iters",
-                     "expand_width", "dist_impl"),
+                     "expand_width", "dist_impl", "edge_impl"),
 )
 def search_fixed_layer(
     vectors, nbrs, queries, seg_lo, seg_hi, *, layer, ef, k,
     metric="l2", max_iters=None, expand_width=DEFAULT_EXPAND_WIDTH,
-    dist_impl="auto",
+    dist_impl="auto", edge_impl="auto",
 ):
     """Beam search on one elemental graph (segment ``[seg_lo, seg_hi]`` at
     ``layer``). Used during construction, and by BasicSearch /
-    SuperPostfiltering baselines."""
+    SuperPostfiltering baselines. ``edge_impl`` is accepted for knob
+    symmetry; this search's nbr_fn is a plain row gather (no
+    improvisation)."""
     n = vectors.shape[0]
     hi_real = jnp.minimum(seg_hi, n - 1)
     entries = range_entry_ids(seg_lo, hi_real, n)
@@ -360,23 +374,26 @@ def search_fixed_layer(
     return beam_search(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
         max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "ef", "k", "metric", "max_iters",
-                     "expand_width", "dist_impl"),
+                     "expand_width", "dist_impl", "edge_impl"),
 )
 def search_filtered(
     vectors, nbrs, queries, L, R, *, mode, ef, k, metric="l2",
     max_iters=None, rng=None, expand_width=DEFAULT_EXPAND_WIDTH,
-    dist_impl="auto",
+    dist_impl="auto", edge_impl="auto",
 ):
     """Post-/In-filtering baselines on the root elemental graph (layer 0).
 
     mode: "post" visits everything, keeps in-range results;
           "in"   only traverses in-range neighbors.
+    ``edge_impl`` is accepted for knob symmetry (layer-0 row gather, no
+    improvisation).
     """
     n = vectors.shape[0]
     mid = jnp.clip((L + R) // 2, 0, n - 1)
@@ -399,6 +416,7 @@ def search_filtered(
     return beam_search(
         vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
         max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl,
         result_filter_fn=filt,
         rng=rng,
     )

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: fused edge selection (the other half of the hop).
+
+Each beam-search iteration improvises up to ``m_out`` out-edges per frontier
+node (paper Algorithm 1). The XLA formulation gathers the full
+``[F, (logn+1)*m]`` candidate-edge block into HBM before masking; at serving
+batch sizes that gather plus the per-row dedup dominate the remaining hop
+cost. Here the packed table ``nbrs[n, layers*m]`` stays un-blocked in
+``ANY``/HBM space and the kernel row-DMAs only each frontier node's edge
+block into a VMEM scratch (software-pipelined like ``gather_distance.py``,
+``-1`` frontier slots skipped by predication), computes the
+``segment_tree.scan_mask`` closed form in-kernel, and replaces the stable
+argsort dedup with a **sort-free equality matrix**: with ``K = layers*m`` a
+strictly-lower-triangular ``[K, K]`` ``id[i] == id[j]`` comparison marks
+non-first occurrences on the VPU, and the priority-ordered top-``m_out``
+falls out of ``m_out`` masked argmin steps — no sort anywhere.
+
+Ids match ``kernels/ref.py::select_edges`` (and the historical argsort
+formulation ``core/edge_select.py::select_edges_batch``) bit-for-bit; the
+math is integer-exact, so parity is equality, not tolerance.
+
+VMEM residency per program is dominated by the ``[bf, K, K]`` dedup
+intermediates: at the default ``bf=8`` and K=288 (logn=17, m=16) the masks
+pad to ``8*288*384`` lanes (~3.5 MB as i32); K up to 400 (logn=24, m=16)
+pads to 512 lanes (~6.5 MB), so ``block_f`` auto-drops to 4 above K=384.
+The gather scratch itself is tiny (``bf*K*4`` bytes). CPU/CI runs use
+``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as _ref
+
+__all__ = ["edge_select_kernel_call"]
+
+
+def _edge_select_kernel(
+    meta_smem,   # SMEM [bf, 4] (u, L, R, pad) — DMA row indices
+    meta_vmem,   # VMEM [bf, 4] (vectorized u/L/R)
+    table_ref,   # ANY  [n, K]  (packed nbrs, never blocked)
+    o_ref,       # VMEM [bf, m_out]
+    xbuf,        # VMEM scratch [bf, K] gathered edge blocks
+    sems,        # DMA semaphores [window]
+    *, bf, K, m, logn, m_out, skip_layers, window,
+):
+    big = jnp.int32(2**30)
+
+    def slot_u(t):
+        return meta_smem[t, 0]
+
+    def row_copy(t):
+        return pltpu.make_async_copy(
+            table_ref.at[slot_u(t)], xbuf.at[t], sems.at[t % window]
+        )
+
+    def start(t):
+        @pl.when(slot_u(t) >= 0)
+        def _():
+            row_copy(t).start()
+
+    def wait(t):
+        @pl.when(slot_u(t) >= 0)
+        def _():
+            row_copy(t).wait()
+
+    # software-pipelined gather: keep up to `window` row DMAs in flight
+    def fill(t, carry):
+        @pl.when(t >= window)
+        def _():
+            wait(t - window)
+
+        start(t)
+        return carry
+
+    jax.lax.fori_loop(0, bf, fill, 0)
+
+    def drain(t, carry):
+        wait(t)
+        return carry
+
+    jax.lax.fori_loop(max(0, bf - window), bf, drain, 0)
+
+    us = meta_vmem[:, 0:1]                                # [bf, 1]
+    L = meta_vmem[:, 1:2]
+    R = meta_vmem[:, 2:3]
+    flat = xbuf[...]                                      # [bf, K]
+
+    # scan-mask + in-range validity: the one shared closed form (Mosaic
+    # needs the 2D broadcasted iota; everything inside is elementwise)
+    lay = jax.lax.broadcasted_iota(jnp.int32, (bf, K), 1) // m
+    valid = _ref.edge_scan_valid(
+        flat, us, L, R, lay, logn=logn, skip_layers=skip_layers
+    )
+
+    # -- sort-free dedup: strictly-lower-triangular equality matrix ---------
+    pos_i = jax.lax.broadcasted_iota(jnp.int32, (bf, K, K), 1)
+    pos_j = jax.lax.broadcasted_iota(jnp.int32, (bf, K, K), 2)
+    eq = (flat[:, :, None] == flat[:, None, :]) & valid[:, None, :]
+    dup = jnp.any(eq & (pos_j < pos_i), axis=2)           # [bf, K]
+
+    # priority == flat position (upper layer first, then slot order)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bf, K), 1)
+    prio = jnp.where(valid & ~dup, pos, big)
+
+    # -- priority-ordered top-m_out: m_out masked argmin steps --------------
+    outs = []
+    for _ in range(m_out):
+        pmin = jnp.min(prio, axis=1, keepdims=True)       # [bf, 1]
+        sel = prio == pmin                                # one hit unless BIG
+        idt = jnp.max(
+            jnp.where(sel, flat, jnp.iinfo(jnp.int32).min),
+            axis=1, keepdims=True,
+        )
+        outs.append(jnp.where(pmin < big, idt, jnp.int32(-1)))
+        prio = jnp.where(sel, big, prio)
+    o_ref[...] = jnp.concatenate(outs, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("logn", "m_out", "skip_layers", "block_f", "window",
+                     "interpret"),
+)
+def edge_select_kernel_call(
+    nbrs, us, L, R, *, logn, m_out, skip_layers=True, block_f=None,
+    window=8, interpret=False,
+):
+    """nbrs int32[n, layers, m], us int32[F] (-1 masked), L/R scalars or
+    int32[F] -> int32[F, m_out] improvised edges, -1 padded.
+
+    Pads F to the ``block_f`` row-tile multiple internally; the table is
+    passed flattened ``[n, layers*m]`` so each frontier node is one
+    contiguous row DMA.
+    """
+    n, layers, m = nbrs.shape
+    K = layers * m
+    F = us.shape[0]
+    us = us.astype(jnp.int32)
+    L = jnp.broadcast_to(jnp.asarray(L, jnp.int32), us.shape)
+    R = jnp.broadcast_to(jnp.asarray(R, jnp.int32), us.shape)
+    bf = block_f if block_f is not None else (8 if K <= 384 else 4)
+
+    meta = jnp.stack(
+        [us, L, R, jnp.zeros_like(us)], axis=1
+    )                                                     # [F, 4]
+    r = (-F) % bf
+    if r:
+        pad = jnp.full((r, 4), -1, jnp.int32)
+        meta = jnp.concatenate([meta, pad], axis=0)
+    Fp = meta.shape[0]
+    grid = (Fp // bf,)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _edge_select_kernel, bf=bf, K=K, m=m, logn=logn, m_out=m_out,
+            skip_layers=skip_layers, window=min(window, bf),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bf, 4), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bf, 4), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((bf, m_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Fp, m_out), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bf, K), jnp.int32),
+            pltpu.SemaphoreType.DMA((min(window, bf),)),
+        ],
+        interpret=interpret,
+    )(meta, meta, nbrs.reshape(n, K))
+    return out[:F]

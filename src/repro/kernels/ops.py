@@ -7,21 +7,50 @@ for the pure-XLA reference instead. ``impl`` selection:
   * "pallas"    — pallas_call, interpret on non-TPU backends
   * "xla"       — ref.py jnp implementation (what the multi-pod dry-run
                   lowers, since Mosaic cannot lower on the CPU host platform)
-  * "auto"      — pallas on TPU else xla
+  * "auto"      — pallas on TPU else xla; overridable per-op via the
+                  ``REPRO_DIST_IMPL`` / ``REPRO_EDGE_IMPL`` env vars, or
+                  globally via ``REPRO_IMPL`` (the CI backend matrix)
+  * "argsort"   — edge selection only: the historical stable-argsort
+                  formulation (``core/edge_select.py``), kept for regression
+                  benchmarking
+
+``select_edges`` is integer-exact: all three backends return bit-identical
+ids. ``gather_dist`` backends agree to f32 tolerance (and bit-exactly under
+identical fusion).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
+from repro.core import edge_select as _legacy_edge_select
 from repro.kernels import distance as _distance
+from repro.kernels import edge_select as _edge_select
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gather_distance as _gather
 from repro.kernels import ref as _ref
 
-__all__ = ["pairwise_dist", "gather_dist", "flash_attention", "default_impl"]
+__all__ = [
+    "pairwise_dist", "gather_dist", "select_edges", "flash_attention",
+    "default_impl",
+]
 
 
-def default_impl() -> str:
+def default_impl(kind: str | None = None) -> str:
+    """Backend for ``impl="auto"``: pallas on TPU, xla elsewhere.
+
+    ``kind`` ("dist" | "edge" | ...) checks ``REPRO_<KIND>_IMPL`` first,
+    then the global ``REPRO_IMPL`` — the hook the CI backend matrix uses to
+    force every auto dispatch through one backend.
+    """
+    if kind:
+        forced = os.environ.get(f"REPRO_{kind.upper()}_IMPL")
+        if forced:
+            return forced
+    forced = os.environ.get("REPRO_IMPL")
+    if forced:
+        return forced
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
@@ -31,7 +60,7 @@ def _interpret() -> bool:
 
 def pairwise_dist(q, x, *, metric="l2", impl="auto", **block_kw):
     if impl == "auto":
-        impl = default_impl()
+        impl = default_impl("dist")
     if impl == "xla":
         return _ref.pairwise_dist(q, x, metric=metric)
     return _distance.pairwise_dist_kernel_call(
@@ -46,11 +75,37 @@ def gather_dist(q, table, ids, *, metric="l2", impl="auto", **block_kw):
     gather+einsum reference, which is also what "auto" picks off-TPU.
     """
     if impl == "auto":
-        impl = default_impl()
+        impl = default_impl("dist")
     if impl == "xla":
         return _ref.gather_dist(q, table, ids, metric=metric)
     return _gather.gather_distance_kernel_call(
         q, table, ids, metric=metric, interpret=_interpret(), **block_kw
+    )
+
+
+def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True,
+                 impl="auto", **block_kw):
+    """Fused edge improvisation (Algorithm 1) for a flat [F] frontier.
+
+    "pallas" runs the Mosaic kernel (row-DMA gather + sort-free dedup, no
+    [F, layers*m] HBM intermediate); "xla" is the sort-free jnp formulation
+    (``ref.select_edges``), also what "auto" picks off-TPU; "argsort" is the
+    historical stable-argsort formulation kept as a benchmark baseline. All
+    backends return bit-identical int32[F, m_out] ids.
+    """
+    if impl == "auto":
+        impl = default_impl("edge")
+    if impl == "xla":
+        return _ref.select_edges(
+            nbrs, us, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers
+        )
+    if impl == "argsort":
+        return _legacy_edge_select.select_edges_batch(
+            nbrs, us, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers
+        )
+    return _edge_select.edge_select_kernel_call(
+        nbrs, us, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers,
+        interpret=_interpret(), **block_kw
     )
 
 

@@ -8,7 +8,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pairwise_dist", "gather_dist", "attention"]
+from repro.core import segment_tree
+
+__all__ = [
+    "pairwise_dist", "gather_dist", "select_edges", "edge_scan_valid",
+    "attention",
+]
+
+# plain int: safe to reference from inside any trace
+_BIG = 2**30
 
 
 def pairwise_dist(q, x, metric="l2"):
@@ -45,6 +53,100 @@ def gather_dist(q, table, ids, metric="l2"):
     else:
         raise ValueError(f"unknown metric {metric!r}")
     return jnp.where(ids < 0, jnp.inf, d)
+
+
+def edge_scan_valid(flat, us, L, R, lay, *, logn, skip_layers=True):
+    """Candidate validity of Algorithm 1, closed form per flat position.
+
+    The one definition of ``segment_tree.scan_mask`` + in-range semantics
+    shared by the jnp path below and the Pallas edge-selection kernel (both
+    callers pass their own ``lay`` iota, since Mosaic needs a broadcasted
+    2D iota while XLA takes a plain ``arange``).
+
+    flat: int[.., K] gathered candidate edges; us/L/R: int[.., 1]; lay:
+    int[.., K] (broadcastable) layer of each flat position. Returns
+    bool[.., K].
+    """
+    layers = logn + 1
+    u = jnp.maximum(us, 0)
+    lo, hi = segment_tree.seg_bounds(u, lay, logn)
+    terminal = (lo >= L) & (hi <= R)
+    # first fully-covered layer; argmax(all-False) == 0 in scan_mask, so an
+    # all-False row (u outside [L, R]) degrades to layer 0 only
+    ft = jnp.min(jnp.where(terminal, lay, layers), axis=-1, keepdims=True)
+    ft = jnp.where(ft == layers, 0, ft)
+    mask = lay <= ft
+    if skip_layers:
+        # skip a layer when the child segment's [L, R]-intersection equals
+        # the current one; the child of u's segment at lay is its segment
+        # at lay+1 (leaves have no child, never skip)
+        lo2, hi2 = segment_tree.seg_bounds(u, jnp.minimum(lay + 1, logn), logn)
+        skip = (
+            (jnp.maximum(lo2, L) == jnp.maximum(lo, L))
+            & (jnp.minimum(hi2, R) == jnp.minimum(hi, R))
+            & (lay < logn)
+        )
+        mask &= ~skip
+    return (
+        (flat >= 0) & (flat >= L) & (flat <= R) & mask
+        & (flat != u) & (us >= 0)
+    )
+
+
+def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True):
+    """Sort-free edge improvisation (paper Algorithm 1) for a flat frontier.
+
+    ``nbrs`` int32[n, layers, m] packed elemental-graph table; ``us``
+    int32[F] frontier node ids (-1 for inactive slots); ``L``/``R`` scalars
+    or int32[F] inclusive rank ranges. Returns int32[F, m_out] improvised
+    edges in priority order, -1 padded.
+
+    This is the semantic contract of the Pallas edge-selection kernel and the
+    off-TPU production path. It produces ids bit-identical to the historical
+    argsort formulation (``core/edge_select.py::select_edges_batch``) but
+    contains no sort: the priority-ordered top-``m_out`` falls out of
+    ``m_out`` masked argmin steps, and the set-union dedup is folded into
+    them *lazily* — after a step selects an id, every position holding that
+    id is wiped, so later steps can only yield new ids. That is equivalent
+    to the kernel's eager strictly-lower-triangular ``[K, K]`` equality
+    matrix (``K = layers*m``): entries that never reach the top-``m_out``
+    never needed dedup. O(m_out * K) work instead of O(K^2), which is what
+    makes this formulation beat the argsort one on shallow-parallelism CPU
+    hosts, not just on the VPU. See DESIGN.md §2.
+    """
+    n, layers, m = nbrs.shape
+    K = layers * m
+    F = us.shape[0]
+    us = us.astype(jnp.int32)
+    L = jnp.broadcast_to(jnp.asarray(L, jnp.int32), us.shape)[:, None]
+    R = jnp.broadcast_to(jnp.asarray(R, jnp.int32), us.shape)[:, None]
+    us = us[:, None]                                      # [F, 1]
+    flat = nbrs[jnp.maximum(us[:, 0], 0)].reshape(F, K)   # [F, K]
+
+    lay = jnp.arange(K, dtype=jnp.int32)[None, :] // m    # [1, K]
+    valid = edge_scan_valid(
+        flat, us, L, R, lay, logn=logn, skip_layers=skip_layers
+    )
+
+    # priority == flat position (upper layer first, then slot order)
+    pos = jnp.arange(K, dtype=jnp.int32)
+    prio = jnp.where(valid, pos[None, :], _BIG)
+
+    # -- top-m_out with lazy dedup: m_out masked argmin steps ---------------
+    # Each step takes the best remaining priority and wipes *every* position
+    # holding the selected id, so duplicates never surface in later steps.
+    def step(p, _):
+        pmin = jnp.min(p, axis=1)                         # [F]
+        sel = p == pmin[:, None]                          # one hit unless BIG
+        idt = jnp.max(
+            jnp.where(sel, flat, jnp.iinfo(jnp.int32).min), axis=1
+        )
+        out_t = jnp.where(pmin < _BIG, idt, jnp.int32(-1))
+        taken = (flat == out_t[:, None]) & (p < _BIG)     # all dups of idt
+        return jnp.where(sel | taken, _BIG, p), out_t
+
+    _, outs = jax.lax.scan(step, prio, None, length=m_out)
+    return outs.T                                         # [F, m_out]
 
 
 def attention(

@@ -37,6 +37,7 @@ class ServingEngine:
     def __init__(
         self, index: RangeGraphIndex, *, ef: int = 64, max_batch: int = 64,
         k_bucket: int = 10, expand_width: int = 4, dist_impl: str = "auto",
+        edge_impl: str = "auto",
     ):
         self.index = index
         self.ef = ef
@@ -44,10 +45,28 @@ class ServingEngine:
         self.k_bucket = k_bucket
         self.expand_width = expand_width
         self.dist_impl = dist_impl
+        self.edge_impl = edge_impl
         self._queue: list[Request] = []
-        self.stats = {"served": 0, "batches": 0, "wall_s": 0.0}
+        # k is a static arg of the jitted search: every distinct value is a
+        # retrace. _k_buckets tracks which bucketed k values this engine has
+        # sent down; stats["compiles"] is its size (one trace per bucket).
+        self._k_buckets: set[int] = set()
+        self.stats = {"served": 0, "batches": 0, "wall_s": 0.0, "compiles": 0}
+
+    def _bucket_k(self, k_req: int) -> int:
+        """Round the requested k up to the next k_bucket multiple so mixed-k
+        workloads hit a bounded set of compiled programs instead of one
+        retrace per distinct k. Clamped to ef: the result list only holds ef
+        candidates (top_k(k > ef) would crash), and submit() rejects
+        requests asking for more than ef."""
+        return min(self.ef, self.k_bucket * max(1, -(-k_req // self.k_bucket)))
 
     def submit(self, req: Request):
+        if req.k > self.ef:
+            raise ValueError(
+                f"requested k={req.k} exceeds the engine's ef={self.ef}; "
+                f"raise ef or lower k"
+            )
         self._queue.append(req)
 
     def flush(self) -> list[Result]:
@@ -65,11 +84,13 @@ class ServingEngine:
         q = np.stack([r.vector for r in batch] + [batch[0].vector] * pad)
         lo = np.array([r.lo for r in batch] + [batch[0].lo] * pad)
         hi = np.array([r.hi for r in batch] + [batch[0].hi] * pad)
-        k = max(max(r.k for r in batch), self.k_bucket)
+        k = self._bucket_k(max(r.k for r in batch))
+        self._k_buckets.add(k)
+        self.stats["compiles"] = len(self._k_buckets)
         L, R = self.index.ranks_of(lo, hi)
         res = self.index.search_ranks(
             q, L, R, k=k, ef=self.ef, expand_width=self.expand_width,
-            dist_impl=self.dist_impl,
+            dist_impl=self.dist_impl, edge_impl=self.edge_impl,
         )
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)

@@ -1,0 +1,84 @@
+"""Degenerate query ranges through the FULL query path.
+
+Edge selection has its own degenerate-range tests (test_edge_select.py);
+these pin the whole ``search_improvised`` engine: empty ranges (L > R),
+single-element ranges (L == R), and whole-domain ranges must terminate and
+return -1-padded / correct results on every edge_impl backend.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, RangeGraphIndex, recall
+
+EDGE_IMPLS = ("xla", "argsort", "pallas")
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(11)
+    n, d = 256, 12
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    cfg = BuildConfig(m=8, ef_construction=32, brute_threshold=32)
+    return RangeGraphIndex.build(vectors, attrs, cfg), rng
+
+
+@pytest.mark.parametrize("edge_impl", EDGE_IMPLS)
+def test_empty_range_returns_all_padding(small_index, edge_impl):
+    idx, rng = small_index
+    B = 6
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    L = np.array([10, 100, 255, 1, 200, 37], np.int32)
+    R = L - 1  # every query empty
+    res = idx.search_ranks(q, L, R, k=5, ef=16, edge_impl=edge_impl)
+    assert (np.asarray(res.ids) == -1).all()
+    assert np.isinf(np.asarray(res.dists)).all()
+    # the engine must notice immediately, not burn max_iters hops
+    assert (np.asarray(res.n_hops) == 0).all()
+    assert (np.asarray(res.n_dists) == 0).all()
+
+
+@pytest.mark.parametrize("edge_impl", EDGE_IMPLS)
+def test_single_element_range(small_index, edge_impl):
+    idx, rng = small_index
+    B = 5
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    L = np.array([0, 17, 128, 200, 255], np.int32)
+    R = L.copy()  # exactly one in-range object each
+    res = idx.search_ranks(q, L, R, k=4, ef=16, edge_impl=edge_impl)
+    ids = np.asarray(res.ids)
+    np.testing.assert_array_equal(ids[:, 0], L)   # the element itself
+    assert (ids[:, 1:] == -1).all()               # nothing else exists
+    want = ((idx.vectors[L] - q) ** 2).sum(1)
+    np.testing.assert_allclose(
+        np.asarray(res.dists)[:, 0], want, rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("edge_impl", EDGE_IMPLS)
+def test_whole_domain_range(small_index, edge_impl):
+    idx, rng = small_index
+    B = 8
+    q = rng.standard_normal((B, idx.dim)).astype(np.float32)
+    L = np.zeros(B, np.int32)
+    R = np.full(B, idx.n - 1, np.int32)
+    res = idx.search_ranks(q, L, R, k=10, ef=64, edge_impl=edge_impl)
+    ids = np.asarray(res.ids)
+    assert ((ids >= 0) & (ids < idx.n)).all()     # full domain: k results
+    gt, _ = idx.brute_force(q, L, R, k=10)
+    assert recall(ids, gt) >= 0.85
+
+
+def test_mixed_degenerate_batch(small_index):
+    """Degenerate and ordinary queries coexist in one batch."""
+    idx, rng = small_index
+    q = rng.standard_normal((4, idx.dim)).astype(np.float32)
+    L = np.array([50, 9, 0, 70], np.int32)
+    R = np.array([49, 9, idx.n - 1, 199], np.int32)  # empty, single, all, wide
+    res = idx.search_ranks(q, L, R, k=5, ef=32)
+    ids = np.asarray(res.ids)
+    assert (ids[0] == -1).all()
+    assert ids[1, 0] == 9 and (ids[1, 1:] == -1).all()
+    assert (ids[2] >= 0).all()
+    got = ids[3][ids[3] >= 0]
+    assert len(got) == 5 and ((got >= 70) & (got <= 199)).all()

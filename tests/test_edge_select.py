@@ -1,8 +1,19 @@
-"""Vectorized Algorithm 1 must match the literal paper transcription."""
+"""Vectorized Algorithm 1 must match the literal paper transcription.
+
+Three formulations are pinned against each other:
+
+  * ``select_edges_reference`` — literal Python transcription (the oracle);
+  * ``core/edge_select.py``    — historical stable-argsort formulation;
+  * ``kernels/ops.select_edges`` — production sort-free paths: the jnp
+    formulation (impl="xla") and the Pallas kernel in interpret mode
+    (impl="pallas"). Ids must be *bit-identical* across all of them,
+    including degenerate ranges (L > R, L == R) and -1 frontier slots.
+"""
 import numpy as np
 from _hypo import given, settings, st
 
 from repro.core import edge_select
+from repro.kernels import ops, ref as kref
 
 
 def make_nbrs(rng, n, layers, m, logn):
@@ -88,3 +99,120 @@ def test_full_range_uses_root_only():
     )
     root = set(int(x) for x in nbrs[u, 0] if x >= 0 and x != u)
     assert set(int(x) for x in got if x >= 0) <= root
+
+
+# ---------------------------------------------------------------------------
+# sort-free formulations (XLA + Pallas interpret) vs the argsort path
+# ---------------------------------------------------------------------------
+
+def _draw_case(data):
+    """Random (nbrs, us, L, R, logn, m, m_out) incl. degenerate ranges."""
+    logn = data.draw(st.integers(2, 6))
+    n = data.draw(st.integers((1 << (logn - 1)) + 1, 1 << logn))
+    m = data.draw(st.integers(2, 6))
+    layers = logn + 1
+    m_out = data.draw(st.integers(1, min(8, layers * m)))
+    seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(seed)
+    nbrs = make_nbrs(rng, n, layers, m, logn)
+    kind = data.draw(st.integers(0, 3))
+    if kind == 0:     # ordinary
+        L = data.draw(st.integers(0, n - 1))
+        R = data.draw(st.integers(L, n - 1))
+    elif kind == 1:   # empty: L > R
+        L = data.draw(st.integers(1, n - 1))
+        R = L - 1
+    elif kind == 2:   # single element
+        L = R = data.draw(st.integers(0, n - 1))
+    else:             # whole domain
+        L, R = 0, n - 1
+    F = data.draw(st.integers(1, 12))
+    us = rng.integers(-1, n, F).astype(np.int32)  # -1 = inactive slot
+    return nbrs, us, L, R, logn, m, m_out
+
+
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_sort_free_xla_bit_identical_to_argsort(data):
+    nbrs, us, L, R, logn, m, m_out = _draw_case(data)
+    for skip in (True, False):
+        want = np.asarray(edge_select.select_edges_batch(
+            nbrs, us, np.int32(L), np.int32(R),
+            logn=logn, m_out=m_out, skip_layers=skip,
+        ))
+        got = np.asarray(ops.select_edges(
+            nbrs, us, np.int32(L), np.int32(R),
+            logn=logn, m_out=m_out, skip_layers=skip, impl="xla",
+        ))
+        np.testing.assert_array_equal(got, want)
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_pallas_kernel_bit_identical_to_argsort(data):
+    nbrs, us, L, R, logn, m, m_out = _draw_case(data)
+    for skip in (True, False):
+        want = np.asarray(edge_select.select_edges_batch(
+            nbrs, us, np.int32(L), np.int32(R),
+            logn=logn, m_out=m_out, skip_layers=skip,
+        ))
+        got = np.asarray(ops.select_edges(
+            nbrs, us, np.int32(L), np.int32(R),
+            logn=logn, m_out=m_out, skip_layers=skip, impl="pallas",
+        ))
+        np.testing.assert_array_equal(got, want)
+
+
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_sort_free_matches_python_reference(data):
+    """The jnp sort-free path against the literal Algorithm 1 oracle."""
+    logn = data.draw(st.integers(2, 6))
+    n = 1 << logn
+    m = data.draw(st.integers(2, 6))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    nbrs = make_nbrs(rng, n, logn + 1, m, logn)
+    L = data.draw(st.integers(0, n - 1))
+    R = data.draw(st.integers(L, n - 1))
+    u = data.draw(st.integers(L, R))
+    for skip in (True, False):
+        got = np.asarray(kref.select_edges(
+            nbrs, np.array([u], np.int32), np.int32(L), np.int32(R),
+            logn=logn, m_out=m, skip_layers=skip,
+        ))[0]
+        want = edge_select.select_edges_reference(
+            nbrs[u], u, L, R, logn=logn, m_out=m, skip_layers=skip
+        )
+        assert [int(x) for x in got if x >= 0] == want
+
+
+def test_sort_free_per_row_ranges():
+    """ops.select_edges takes per-row L/R (the flattened-frontier contract)."""
+    logn, m = 4, 4
+    n = 1 << logn
+    rng = np.random.default_rng(5)
+    nbrs = make_nbrs(rng, n, logn + 1, m, logn)
+    us = np.array([3, 7, 12, -1], np.int32)
+    L = np.array([0, 4, 12, 0], np.int32)
+    R = np.array([7, 11, 12, 15], np.int32)  # row 2: L == R (empty after !=u)
+    for impl in ("xla", "pallas"):
+        got = np.asarray(ops.select_edges(
+            nbrs, us, L, R, logn=logn, m_out=m, impl=impl,
+        ))
+        want = np.stack([
+            np.asarray(edge_select.select_edges_batch(
+                nbrs, us[i:i + 1], L[i], R[i], logn=logn, m_out=m,
+            ))[0]
+            for i in range(4)
+        ])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_dispatch_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_EDGE_IMPL", "xla")
+    assert ops.default_impl("edge") == "xla"
+    monkeypatch.setenv("REPRO_IMPL", "pallas")
+    assert ops.default_impl("edge") == "xla"   # specific var wins
+    assert ops.default_impl("dist") == "pallas"
+    monkeypatch.delenv("REPRO_EDGE_IMPL")
+    assert ops.default_impl("edge") == "pallas"

@@ -1,0 +1,98 @@
+"""ServingEngine: batching, k-bucketing, and retrace accounting.
+
+``k`` is a static argument of the jitted search, so every distinct value
+the engine forwards is a full retrace. The engine therefore rounds each
+batch's max requested k up to the next ``k_bucket`` multiple; mixed-k
+workloads must hit a bounded set of compiles, tracked by
+``stats["compiles"]``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, RangeGraphIndex
+from repro.serve.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(23)
+    n, d = 256, 12
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    cfg = BuildConfig(m=8, ef_construction=32, brute_threshold=32)
+    return RangeGraphIndex.build(vectors, attrs, cfg), rng
+
+
+def _requests(rng, index, ks):
+    reqs = []
+    for k in ks:
+        v = rng.standard_normal(index.dim).astype(np.float32)
+        lo, hi = sorted(rng.uniform(0, 100, 2))
+        reqs.append(Request(vector=v, lo=lo, hi=hi, k=k))
+    return reqs
+
+
+def test_mixed_k_single_bucket(small_index):
+    """Every k <= k_bucket rounds to one bucket: exactly one trace."""
+    idx, rng = small_index
+    eng = ServingEngine(idx, ef=32, max_batch=4, k_bucket=10)
+    for r in _requests(rng, idx, [3, 7, 10, 1, 9, 10, 2, 5]):
+        eng.submit(r)
+    results = eng.flush()
+    assert len(results) == 8
+    assert eng.stats["compiles"] == 1
+    assert eng.stats["served"] == 8
+
+
+def test_k_buckets_bound_compiles(small_index):
+    """ks spanning two buckets produce exactly two traces, rounded up."""
+    idx, rng = small_index
+    eng = ServingEngine(idx, ef=32, max_batch=2, k_bucket=10)
+    for r in _requests(rng, idx, [3, 7, 12, 15, 20, 9]):
+        eng.submit(r)
+    eng.flush()
+    # batches [3,7] -> 10, [12,15] -> 20, [20,9] -> 20: two buckets
+    assert eng.stats["compiles"] == 2
+    assert eng._k_buckets == {10, 20}
+
+
+def test_bucket_rounding_preserves_requested_k(small_index):
+    """Each result is cut back to the request's own k."""
+    idx, rng = small_index
+    eng = ServingEngine(idx, ef=32, max_batch=8, k_bucket=10)
+    ks = [3, 12, 7]
+    for r in _requests(rng, idx, ks):
+        eng.submit(r)
+    results = eng.flush()
+    for r, k in zip(results, ks):
+        assert r.ids.shape == (k,)
+        assert r.dists.shape == (k,)
+
+
+def test_results_respect_value_range(small_index):
+    idx, rng = small_index
+    eng = ServingEngine(idx, ef=32, max_batch=4, k_bucket=5)
+    reqs = _requests(rng, idx, [5] * 6)
+    for r in reqs:
+        eng.submit(r)
+    results = eng.flush()
+    attrs_orig = np.empty(idx.n)
+    attrs_orig[idx.perm] = idx.attrs  # attribute value per original id
+    for req, res in zip(reqs, results):
+        got = res.ids[res.ids >= 0]
+        assert ((attrs_orig[got] >= req.lo) & (attrs_orig[got] <= req.hi)).all()
+
+
+def test_bucketed_k_clamps_to_ef(small_index):
+    """Bucketing must never push the static k past ef (top_k limit), and
+    k > ef requests are rejected at submit time."""
+    idx, rng = small_index
+    eng = ServingEngine(idx, ef=16, max_batch=4, k_bucket=10)
+    for r in _requests(rng, idx, [15, 11]):  # bucket would be 20 > ef
+        eng.submit(r)
+    results = eng.flush()
+    assert eng._k_buckets == {16}
+    assert results[0].ids.shape == (15,)
+    with pytest.raises(ValueError, match="exceeds the engine's ef"):
+        eng.submit(Request(vector=np.zeros(idx.dim, np.float32),
+                           lo=0.0, hi=1.0, k=17))

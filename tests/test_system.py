@@ -96,6 +96,22 @@ def test_duplicate_attribute_values():
     assert ((attrs[sel] >= 3) & (attrs[sel] <= 6)).all()
 
 
+def test_build_chunk_size_invariant():
+    """cfg.chunk is a batching knob only: small chunks (exercising the
+    chunked loops in _build_search_level, _build_brute_level and the
+    reverse pass) must reproduce the default-chunk table exactly."""
+    rng = np.random.default_rng(17)
+    n, d = 256, 8
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 1, n)
+    base = dict(m=6, ef_construction=24, brute_threshold=32)
+    big = RangeGraphIndex.build(vectors, attrs, BuildConfig(**base))
+    small = RangeGraphIndex.build(
+        vectors, attrs, BuildConfig(**base, chunk=64)
+    )
+    np.testing.assert_array_equal(big.neighbors, small.neighbors)
+
+
 def test_save_load_roundtrip(tmp_path, small_index):
     idx, rng = small_index
     p = str(tmp_path / "index.rg")
