@@ -1,0 +1,141 @@
+"""CI bench-gate: keep the committed kernel perf records honest.
+
+Compares the ``--smoke`` runs the CI job just produced
+(``artifacts/BENCH_hotpath_smoke.json``, ``artifacts/BENCH_build_smoke.json``)
+against the committed full-shape records (``BENCH_hotpath.json``,
+``BENCH_build.json``) and gates on two kinds of drift:
+
+  * **shape / correctness — hard fail** (exit 1): a smoke artifact is
+    missing or unparseable (the benchmark crashed), its schema lost a
+    required section (a refactor silently dropped a measurement), a
+    fused-vs-baseline speedup is non-finite, or the build benchmark's
+    backend-parity check reported a divergence.
+  * **timing — soft warn** (exit 0, GitHub warning annotation): a smoke
+    fused-vs-baseline ratio regressed more than ``--tolerance`` (default
+    25%) relative to the committed record. Smoke shapes are tiny and shared
+    runners are noisy, so timing only hard-fails under ``--strict`` (for
+    dedicated hardware).
+
+Baselines come from the committed records' ``smoke_ref`` section — the
+same-shape ratios written by ``hotpath.py --smoke --update-smoke-ref`` /
+``buildpath.py --smoke --update-smoke-ref`` on the dev host (full,
+non-smoke re-runs carry the section forward) — falling back to the
+full-shape ratio when a record predates it.
+
+Usage: ``python benchmarks/ci_gate.py [--tolerance 0.25] [--strict]``
+(run after ``hotpath.py --smoke`` and ``buildpath.py --smoke``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+ARTIFACTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "artifacts"
+)
+
+# (committed file, smoke file) -> list of (section, ratio key) to compare.
+# Each ratio is a fused-vs-baseline speedup, so the gate is unit-free.
+GATES = {
+    ("BENCH_hotpath.json", "BENCH_hotpath_smoke.json"): [
+        ("expansion_step", "speedup"),
+        ("edge_select_step", "speedup"),
+    ],
+    ("BENCH_build.json", "BENCH_build_smoke.json"): [
+        (None, "prune_speedup_best"),
+    ],
+}
+
+
+def _load(path, errors):
+    if not os.path.exists(path):
+        errors.append(f"missing artifact {path}")
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"unreadable artifact {path}: {e}")
+        return None
+
+
+def _ratio(doc, section, key, label, errors):
+    node = doc if section is None else doc.get(section)
+    if not isinstance(node, dict) or key not in node:
+        errors.append(f"{label}: required key {section or ''}.{key} missing")
+        return None
+    v = node[key]
+    if not isinstance(v, (int, float)) or not math.isfinite(v) or not v > 0:
+        errors.append(f"{label}: {section or ''}.{key} = {v!r} not a "
+                      "positive finite ratio")
+        return None
+    return float(v)
+
+
+def _baseline(committed, section, key, label, errors):
+    """Committed reference ratio for a smoke measurement.
+
+    Prefers the record's ``smoke_ref`` section (same tiny shapes as the CI
+    smoke run, measured on the dev host at commit time) and falls back to
+    the full-shape ratio — comparable in kind, noisier across shapes."""
+    ref = committed.get("smoke_ref")
+    rkey = f"{section}.{key}" if section else key
+    if isinstance(ref, dict) and isinstance(ref.get(rkey), (int, float)) \
+            and math.isfinite(ref[rkey]) and ref[rkey] > 0:
+        return float(ref[rkey])
+    return _ratio(committed, section, key, label, errors)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="max relative speedup regression before warning")
+    ap.add_argument("--strict", action="store_true",
+                    help="timing regressions fail instead of warning "
+                         "(dedicated hardware only)")
+    args = ap.parse_args(argv)
+
+    errors: list[str] = []
+    warnings: list[str] = []
+
+    for (committed_name, smoke_name), keys in GATES.items():
+        committed = _load(os.path.join(ARTIFACTS, committed_name), errors)
+        smoke = _load(os.path.join(ARTIFACTS, smoke_name), errors)
+        if committed is None or smoke is None:
+            continue
+        # correctness flags are hard: a parity divergence is a real bug
+        if smoke.get("parity") is False or committed.get("parity") is False:
+            errors.append(f"{smoke_name}: backend parity check failed")
+        for section, key in keys:
+            want = _baseline(committed, section, key, committed_name, errors)
+            got = _ratio(smoke, section, key, smoke_name, errors)
+            if want is None or got is None:
+                continue
+            rel = got / want - 1.0
+            line = (f"{smoke_name} {section or 'root'}.{key}: smoke "
+                    f"{got:.2f}x vs committed {want:.2f}x ({rel:+.0%})")
+            if rel < -args.tolerance:
+                warnings.append(line)
+            else:
+                print("ok:", line)
+
+    for w in warnings:
+        print(f"::warning::bench-gate timing regression: {w}")
+    for e in errors:
+        print(f"::error::bench-gate: {e}")
+    if errors:
+        print(f"bench-gate: FAIL ({len(errors)} shape/correctness errors)")
+        return 1
+    if warnings and args.strict:
+        print(f"bench-gate: FAIL ({len(warnings)} timing regressions, "
+              "--strict)")
+        return 1
+    print(f"bench-gate: ok ({len(warnings)} timing warnings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import BuildConfig, RangeGraphIndex, recall
 from repro.data.pipeline import vector_dataset
+from repro.serve.engine import bucket_k
 
 # CPU-scale stand-ins for the paper's five datasets (Table 1)
 BENCH_DATASETS = {
@@ -69,18 +70,45 @@ def make_workload(index: RangeGraphIndex, kind: str, n_queries=128,
 
 
 def make_searcher(index: RangeGraphIndex, *, ef=64, expand_width=4,
-                  dist_impl="auto", edge_impl="auto", skip_layers=True):
+                  dist_impl="auto", edge_impl="auto", skip_layers=True,
+                  k_bucket=DEFAULT_K):
     """Bind index + engine knobs into the ``search_fn(q, L, R, k)`` shape
-    that ``measure`` consumes."""
+    that ``measure`` consumes.
+
+    ``k_bucket`` applies the serve-side rounding (the same
+    ``serve.engine.bucket_k`` rule ServingEngine uses): the requested k is
+    rounded up to the next bucket multiple (clamped to ef) before it
+    reaches the jitted search, so mixed-k qps sweeps hit a bounded set of
+    compiled programs instead of one retrace per distinct k; results are
+    sliced back to the caller's k. Pass ``k_bucket=None`` to disable the
+    rounding."""
 
     def search_fn(q, L, R, k):
-        return index.search_ranks(
-            q, L, R, k=k, ef=ef, expand_width=expand_width,
+        kb = bucket_k(k, k_bucket, ef) if k_bucket else k
+        res = index.search_ranks(
+            q, L, R, k=kb, ef=ef, expand_width=expand_width,
             dist_impl=dist_impl, edge_impl=edge_impl,
             skip_layers=skip_layers,
         )
+        if kb != k:
+            res = res._replace(ids=res.ids[:, :k], dists=res.dists[:, :k])
+        return res
 
     return search_fn
+
+
+def time_it(fn, *args, iters=50, warmup=2):
+    """Mean seconds per call, post-compile (the one timing loop both perf
+    benchmarks use, so their records stay comparable)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
 
 
 def measure(search_fn, wl: Workload, index, *, k=DEFAULT_K, warmup=True):
@@ -110,3 +138,40 @@ def artifacts_dir():
         os.path.abspath(__file__))), "artifacts")
     os.makedirs(d, exist_ok=True)
     return d
+
+
+def carry_smoke_ref(payload: dict, committed_path: str) -> dict:
+    """Preserve the committed record's ``smoke_ref`` on a full re-run.
+
+    ``smoke_ref`` holds fused-vs-baseline ratios measured at *smoke* shapes
+    — the same-shape baselines ``ci_gate.py`` compares CI smoke runs
+    against. A full benchmark run measures different shapes, so it must not
+    drop the section; refresh it explicitly with ``--smoke
+    --update-smoke-ref``."""
+    import json
+
+    if os.path.exists(committed_path):
+        try:
+            with open(committed_path) as f:
+                old = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return payload
+        if isinstance(old.get("smoke_ref"), dict):
+            payload.setdefault("smoke_ref", old["smoke_ref"])
+    return payload
+
+
+def update_smoke_ref(committed_path: str, refs: dict) -> bool:
+    """Write this smoke run's ratios into the committed record's
+    ``smoke_ref`` section (the ``--update-smoke-ref`` flag). Returns False
+    when there is no committed record to update."""
+    import json
+
+    if not os.path.exists(committed_path):
+        return False
+    with open(committed_path) as f:
+        doc = json.load(f)
+    doc["smoke_ref"] = {k: round(float(v), 4) for k, v in refs.items()}
+    with open(committed_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return True

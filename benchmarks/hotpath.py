@@ -32,7 +32,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 import numpy as np
 
@@ -41,22 +40,12 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import jax
 import jax.numpy as jnp
 
-from common import DEFAULT_K, artifacts_dir, build_index, make_searcher, \
-    make_workload, measure
+from common import DEFAULT_K, artifacts_dir, build_index, carry_smoke_ref, \
+    make_searcher, make_workload, measure, time_it, update_smoke_ref
 from repro.core import bitset
 from repro.core import edge_select as edge_select_mod
 from repro.core.search import _pairdist
 from repro.kernels import ops
-
-
-def time_it(fn, *args, iters=50, warmup=2):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def bench_expansion_step(B, n, d, M, iters, dist_impl):
@@ -191,6 +180,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes / few iters: a CI regression probe "
                          "for hot-path shapes, not a measurement")
+    ap.add_argument("--update-smoke-ref", action="store_true",
+                    help="with --smoke: record this run's ratios as the "
+                         "committed BENCH_hotpath.json smoke_ref baseline "
+                         "(what the CI bench-gate compares against)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -255,8 +248,21 @@ def main(argv=None):
         "search_sweep": sweep,
     }
     # smoke numbers are meaningless; never clobber the real perf record
-    name = "BENCH_hotpath_smoke.json" if args.smoke else "BENCH_hotpath.json"
-    out = os.path.join(artifacts_dir(), name)
+    committed = os.path.join(artifacts_dir(), "BENCH_hotpath.json")
+    if args.smoke:
+        out = os.path.join(artifacts_dir(), "BENCH_hotpath_smoke.json")
+        if args.update_smoke_ref:
+            refs = {
+                "expansion_step.speedup": step["speedup"],
+                "edge_select_step.speedup": edge["speedup"],
+            }
+            if update_smoke_ref(committed, refs):
+                print("updated smoke_ref in", committed)
+            else:
+                print("no committed record to update:", committed)
+    else:
+        out = committed
+        payload = carry_smoke_ref(payload, committed)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
     print("wrote", out)

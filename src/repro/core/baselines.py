@@ -225,9 +225,9 @@ def oracle_search(
     groups: dict[tuple[int, int], list[int]] = {}
     for i in range(B):
         groups.setdefault((int(L[i]), int(R[i])), []).append(i)
-    cfg = build_mod.BuildConfig(
-        m=index.build_cfg.m, ef_construction=index.build_cfg.ef_construction,
-    )
+    # the oracle graphs must be pruned exactly like the index's own (same
+    # alpha/fill/prune backend), so reuse its whole config
+    cfg = index.build_cfg
     for (lo, hi), idxs in groups.items():
         keyed = (lo, hi)
         if keyed not in cache:

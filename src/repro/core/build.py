@@ -11,7 +11,9 @@ node ``u`` in the left child:
     sibling's already-built elemental graph — this is one
     ``search_fixed_layer`` call for *all* n nodes of the level at once, each
     query carrying its own sibling-segment bounds;
-  * the merged candidate set is RNG-pruned (``rng.prune_batch``).
+  * the merged candidate set is RNG-pruned (``kernels/ops.py::prune`` — the
+    fused lazy-column formulation / Pallas kernel, dispatched by
+    ``cfg.prune_impl``, with ``core/rng.py`` kept as the eager oracle).
 
 Levels whose segments are small (``<= brute_threshold``) skip the search and
 take the whole segment as candidates (exact RNG up to the degree cap).
@@ -24,13 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rng as rng_mod
 from repro.core import search as search_mod
+from repro.kernels import ops
 
 __all__ = ["BuildConfig", "build_neighbor_table", "build_flat_graph"]
 
@@ -44,6 +47,7 @@ class BuildConfig:
     add_reverse: bool = True       # bidirectional pass per level
     fill_pruned: bool = True       # keepPrunedConnections
     chunk: int = 4096              # nodes per batched pruning call
+    prune_impl: str = "auto"       # "auto" | "pallas" | "xla" | "legacy"
 
 
 def _level_sizes(n: int) -> tuple[int, int]:
@@ -51,12 +55,15 @@ def _level_sizes(n: int) -> tuple[int, int]:
     return logn, logn + 1
 
 
-def _reverse_pass(nbrs_lay: np.ndarray, vectors, seg_of, cfg: BuildConfig):
-    """Add reverse edges then re-prune each node's list. numpy + jitted prune.
+def _reverse_pass(
+    nbrs_lay: np.ndarray, vectors, vec_j, seg_of, cfg: BuildConfig
+):
+    """Add reverse edges then re-prune each node's list. numpy + fused prune.
 
-    nbrs_lay: int32[n, m] this level's edges. seg_of: int32[n] segment id of
-    each node at this level (reverse edges only ever connect nodes of the same
-    segment, but we keep the check for safety).
+    nbrs_lay: int32[n, m] this level's edges. vec_j: the jnp vector table
+    (``ops.prune`` gathers candidate vectors from it). seg_of: int32[n]
+    segment id of each node at this level (reverse edges only ever connect
+    nodes of the same segment, but we keep the check for safety).
     """
     n, m = nbrs_lay.shape
     # collect reverse candidates: for edge (u, v) add u to v's pool (capped)
@@ -87,19 +94,24 @@ def _reverse_pass(nbrs_lay: np.ndarray, vectors, seg_of, cfg: BuildConfig):
         d = jnp.sum((cvec - u_vec[:, None, :]) ** 2, axis=-1)
         d = jnp.where(ids >= 0, d, jnp.inf)
         out[s:e] = np.asarray(
-            rng_mod.prune_batch(
-                ids, d, cvec, m=m, alpha=cfg.alpha, fill=cfg.fill_pruned
+            ops.prune(
+                ids, d, vec_j, m=m, alpha=cfg.alpha, fill=cfg.fill_pruned,
+                impl=cfg.prune_impl, cand_vecs=cvec,
             )
         )
     return out
 
 
 def build_neighbor_table(
-    vectors: np.ndarray, cfg: BuildConfig | None = None, *, verbose=False
+    vectors: np.ndarray, cfg: BuildConfig | None = None, *, verbose=False,
+    level_times: list | None = None,
 ) -> np.ndarray:
     """Build the packed elemental-graph table ``int32[n, layers, m]``.
 
     ``vectors`` must already be in attribute-rank order (see index.py).
+    ``level_times``, if given a list, collects per-level wall-clock dicts
+    (layer, segment size, kind, seconds) — the build-throughput record
+    ``benchmarks/buildpath.py`` emits.
     """
     cfg = cfg or BuildConfig()
     vectors = np.asarray(vectors, np.float32)
@@ -113,6 +125,7 @@ def build_neighbor_table(
     for lay in range(logn - 1, -1, -1):  # leaves (logn) have no edges
         size = 1 << (logn - lay)
         seg_of = ids_all >> (logn - lay)
+        t0 = time.perf_counter()
         if size <= cfg.brute_threshold:
             edges = _build_brute_level(vec_j, n, lay, logn, size, cfg)
         else:
@@ -120,8 +133,14 @@ def build_neighbor_table(
                 vec_j, nbrs, n, lay, logn, size, cfg
             )
         if cfg.add_reverse:
-            edges = _reverse_pass(edges, vectors, seg_of, cfg)
+            edges = _reverse_pass(edges, vectors, vec_j, seg_of, cfg)
         nbrs[:, lay, :] = edges
+        if level_times is not None:
+            level_times.append({
+                "layer": int(lay), "seg_size": int(size),
+                "kind": "brute" if size <= cfg.brute_threshold else "search",
+                "seconds": time.perf_counter() - t0,
+            })
         if verbose:
             deg = float((edges >= 0).sum(1).mean())
             print(f"  layer {lay:2d} seg_size {size:7d} mean_deg {deg:.1f}")
@@ -145,8 +164,9 @@ def _build_brute_level(vec_j, n, lay, logn, size, cfg: BuildConfig):
         dist = jnp.sum((cvec - uvec[:, None, :]) ** 2, -1)
         dist = jnp.where(valid, dist, jnp.inf)
         out[s:e] = np.asarray(
-            rng_mod.prune_batch(
-                cand, dist, cvec, m=m, alpha=cfg.alpha, fill=cfg.fill_pruned
+            ops.prune(
+                cand, dist, vec_j, m=m, alpha=cfg.alpha,
+                fill=cfg.fill_pruned, impl=cfg.prune_impl, cand_vecs=cvec,
             )
         )
     return out
@@ -179,8 +199,9 @@ def _build_search_level(vec_j, nbrs, n, lay, logn, size, cfg: BuildConfig):
         dist = jnp.sum((cvec - vec_j[u][:, None, :]) ** 2, -1)
         dist = jnp.where(valid, dist, jnp.inf)
         out[s:e] = np.asarray(
-            rng_mod.prune_batch(
-                cand, dist, cvec, m=m, alpha=cfg.alpha, fill=cfg.fill_pruned
+            ops.prune(
+                cand, dist, vec_j, m=m, alpha=cfg.alpha,
+                fill=cfg.fill_pruned, impl=cfg.prune_impl, cand_vecs=cvec,
             )
         )
     return out

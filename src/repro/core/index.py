@@ -55,8 +55,13 @@ class RangeGraphIndex:
         cfg: build_mod.BuildConfig | None = None,
         *,
         verbose: bool = False,
+        prune_impl: str | None = None,
     ) -> "RangeGraphIndex":
+        """``prune_impl`` overrides ``cfg.prune_impl`` (the construction-prune
+        backend: "auto" | "pallas" | "xla" | "legacy", see kernels/ops)."""
         cfg = cfg or build_mod.BuildConfig()
+        if prune_impl is not None:
+            cfg = dataclasses.replace(cfg, prune_impl=prune_impl)
         vectors = np.asarray(vectors, np.float32)
         attrs = np.asarray(attrs, np.float64)
         n = vectors.shape[0]

@@ -10,6 +10,12 @@ automatically from the processing order). Distances here are *squared* L2, so
 The sequential keep-set recurrence is an O(C) ``fori_loop`` over a
 precomputed candidate-candidate distance matrix, vmapped over every node of a
 segment-tree level at once — the bulk-synchronous construction of DESIGN.md.
+
+This eager [C, C] formulation is the historical build path, retained as the
+bit-identical oracle and benchmark baseline (``impl="legacy"`` in
+``kernels/ops.py::prune``); production builds dispatch through the fused
+lazy-column formulation (``kernels/ref.py::prune`` off-TPU, the Pallas
+construction-prune kernel on TPU).
 """
 from __future__ import annotations
 

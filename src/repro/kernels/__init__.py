@@ -5,9 +5,10 @@ kernels/ops.py     — jit'd wrappers with impl selection
 kernels/ref.py     — pure-jnp oracles
 
 Use ``from repro.kernels import ops`` and call ``ops.pairwise_dist`` /
-``ops.gather_dist`` / ``ops.select_edges`` / ``ops.flash_attention``
-(impl="auto" picks Pallas on TPU, XLA elsewhere; the ``REPRO_IMPL`` /
-``REPRO_DIST_IMPL`` / ``REPRO_EDGE_IMPL`` env vars force a backend).
+``ops.gather_dist`` / ``ops.select_edges`` / ``ops.prune`` /
+``ops.flash_attention`` (impl="auto" picks Pallas on TPU, XLA elsewhere;
+the ``REPRO_IMPL`` / ``REPRO_DIST_IMPL`` / ``REPRO_EDGE_IMPL`` /
+``REPRO_PRUNE_IMPL`` env vars force a backend).
 """
 from repro.kernels import ops
 

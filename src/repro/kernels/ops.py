@@ -8,32 +8,41 @@ for the pure-XLA reference instead. ``impl`` selection:
   * "xla"       — ref.py jnp implementation (what the multi-pod dry-run
                   lowers, since Mosaic cannot lower on the CPU host platform)
   * "auto"      — pallas on TPU else xla; overridable per-op via the
-                  ``REPRO_DIST_IMPL`` / ``REPRO_EDGE_IMPL`` env vars, or
-                  globally via ``REPRO_IMPL`` (the CI backend matrix)
+                  ``REPRO_DIST_IMPL`` / ``REPRO_EDGE_IMPL`` /
+                  ``REPRO_PRUNE_IMPL`` env vars, or globally via
+                  ``REPRO_IMPL`` (the CI backend matrix)
   * "argsort"   — edge selection only: the historical stable-argsort
                   formulation (``core/edge_select.py``), kept for regression
                   benchmarking
+  * "legacy"    — construction prune only: the historical eager path
+                  (``core/rng.py::prune_batch``, full [C, C] matrix), kept
+                  as the bit-identical oracle and benchmark baseline
 
 ``select_edges`` is integer-exact: all three backends return bit-identical
-ids. ``gather_dist`` backends agree to f32 tolerance (and bit-exactly under
-identical fusion).
+ids. ``prune`` backends agree bit-identically in kept ids (keep decisions
+compare f32 distances built from the same expansion). ``gather_dist``
+backends agree to f32 tolerance (and bit-exactly under identical fusion).
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import edge_select as _legacy_edge_select
+from repro.core import rng as _legacy_rng
 from repro.kernels import distance as _distance
 from repro.kernels import edge_select as _edge_select
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gather_distance as _gather
+from repro.kernels import prune as _prune
 from repro.kernels import ref as _ref
 
 __all__ = [
-    "pairwise_dist", "gather_dist", "select_edges", "flash_attention",
-    "default_impl",
+    "pairwise_dist", "gather_dist", "select_edges", "prune",
+    "flash_attention", "default_impl",
 ]
 
 
@@ -58,9 +67,20 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _check_impl(op, impl, allowed):
+    """Reject unknown backend tokens instead of silently running Pallas —
+    e.g. a global REPRO_IMPL=legacy (prune-only token) or a typo must not
+    route the other ops through the interpreter on CPU."""
+    if impl not in allowed:
+        raise ValueError(
+            f"{op}: unknown impl {impl!r} (expected one of {sorted(allowed)})"
+        )
+
+
 def pairwise_dist(q, x, *, metric="l2", impl="auto", **block_kw):
     if impl == "auto":
         impl = default_impl("dist")
+    _check_impl("pairwise_dist", impl, {"pallas", "xla"})
     if impl == "xla":
         return _ref.pairwise_dist(q, x, metric=metric)
     return _distance.pairwise_dist_kernel_call(
@@ -76,6 +96,7 @@ def gather_dist(q, table, ids, *, metric="l2", impl="auto", **block_kw):
     """
     if impl == "auto":
         impl = default_impl("dist")
+    _check_impl("gather_dist", impl, {"pallas", "xla"})
     if impl == "xla":
         return _ref.gather_dist(q, table, ids, metric=metric)
     return _gather.gather_distance_kernel_call(
@@ -95,6 +116,7 @@ def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True,
     """
     if impl == "auto":
         impl = default_impl("edge")
+    _check_impl("select_edges", impl, {"pallas", "xla", "argsort"})
     if impl == "xla":
         return _ref.select_edges(
             nbrs, us, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers
@@ -105,6 +127,64 @@ def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True,
         )
     return _edge_select.edge_select_kernel_call(
         nbrs, us, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers,
+        interpret=_interpret(), **block_kw
+    )
+
+
+_prune_xla = functools.partial(
+    jax.jit, static_argnames=("m", "fill")
+)(_ref.prune)
+_prune_xla_vecs = functools.partial(
+    jax.jit, static_argnames=("m", "fill")
+)(_ref.prune_vecs)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "fill"))
+def _prune_legacy(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True):
+    cvec = table[jnp.maximum(cand_ids, 0)].astype(jnp.float32)
+    return _legacy_rng.prune_batch(
+        cand_ids, cand_dists, cvec, m=m, alpha=alpha, fill=fill
+    )
+
+
+def prune(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True,
+          impl="auto", cand_vecs=None, **block_kw):
+    """Fused construction prune (the per-level build hot loop).
+
+    "pallas" runs the Mosaic kernel (row-DMA gather + lazy cc columns, no
+    [B, C, d] or [B, C, C] HBM intermediates); "xla" is the lazy-column jnp
+    formulation (``ref.prune``), also what "auto" picks off-TPU; "legacy" is
+    the historical eager path (XLA gather + full [C, C] distance matrix +
+    C-step scan, ``core/rng.py::prune_batch``), kept as the bit-identical
+    oracle and benchmark baseline. All backends agree in kept ids.
+
+    ``cand_vecs`` [B, C, d]: the already-gathered candidate vectors, when
+    the caller materialized them anyway (the build loop does, to compute
+    ``cand_dists``) — saves the xla/legacy paths a redundant gather. The
+    Pallas path ignores it: DMA-ing rows straight from ``table`` is the
+    point. Gathers are exact, so results are identical either way.
+    """
+    if impl == "auto":
+        impl = default_impl("prune")
+    _check_impl("prune", impl, {"pallas", "xla", "legacy"})
+    if impl == "xla":
+        if cand_vecs is not None:
+            return _prune_xla_vecs(
+                cand_ids, cand_dists, cand_vecs, m=m, alpha=alpha, fill=fill
+            )
+        return _prune_xla(
+            cand_ids, cand_dists, table, m=m, alpha=alpha, fill=fill
+        )
+    if impl == "legacy":
+        if cand_vecs is not None:
+            return _legacy_rng.prune_batch(
+                cand_ids, cand_dists, cand_vecs, m=m, alpha=alpha, fill=fill
+            )
+        return _prune_legacy(
+            cand_ids, cand_dists, table, m=m, alpha=alpha, fill=fill
+        )
+    return _prune.prune_kernel_call(
+        cand_ids, cand_dists, table, m=m, alpha=float(alpha), fill=fill,
         interpret=_interpret(), **block_kw
     )
 

@@ -1,0 +1,210 @@
+"""Pallas TPU kernel: fused construction prune (the build-path hot loop).
+
+Every level of the bottom-up build RNG-prunes each node's candidate list
+(paper Def. 2.1 / §3.2.2). The legacy formulation (``core/rng.py``)
+precomputes the full ``[C, C]`` candidate-candidate distance matrix in XLA —
+``O(C^2 d)`` flops and a ``[B, C, C]`` HBM intermediate — before a
+``C``-step sequential keep-set scan. Here the candidate vectors never touch
+an XLA gather: the vector table stays un-blocked in ``ANY``/HBM space and
+the kernel row-DMAs only each chunk row's ``C`` candidate vectors into a
+VMEM scratch (software-pipelined like ``gather_distance.py``, ``-1`` slots
+skipped by predication), then runs the keep-set recurrence *flipped*: at
+most ``m`` masked-argmin sweeps each select the nearest live candidate by
+``(class, du, position)`` and — only when the selection is a keep — compute
+that one candidate's distance column ``cc[:, j]`` on the fly against the
+chunk (one MXU pass), growing the suppressed set. Only the kept set (≤ m
+rows) ever contributes columns, so the work drops to ``O(m C d)`` and the
+HNSW-style ``keepPrunedConnections`` fill pass folds into the same sweep as
+selection class 1 (suppressed survivors, still in distance order).
+
+Ids match ``kernels/ref.py::prune`` (the lazy jnp contract) and
+``core/rng.py::prune`` (the eager oracle) in kept ids; the keep decisions
+compare f32 distances built from the same ``xx_i - 2 x_i.x_j + xx_j``
+expansion, so parity holds under identical fusion.
+
+VMEM residency per program: the gather scratch ``bb*C*d_pad*4`` bytes
+(default ``bb=8``, C=128, d=128: 0.5 MB) plus the ``[bb, C, C]`` dedup
+masks (0.5 MB as i32 at C=128); lower ``block_b`` for very large ``C*d``.
+CPU/CI runs use ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["prune_kernel_call"]
+
+
+def _prune_kernel(
+    ids_smem,    # SMEM [bb, C] (DMA row indices)
+    ids_vmem,    # VMEM [bb, C] (vectorized ids)
+    du_ref,      # VMEM [bb, C] squared distances to u
+    table_ref,   # ANY  [n, d]  (full table, never blocked)
+    o_ref,       # VMEM [bb, m]
+    xbuf,        # VMEM scratch [bb*C, d] gathered candidate vectors
+    sems,        # DMA semaphores [window]
+    *, bb, C, m, alpha, fill, window,
+):
+    total = bb * C
+    big = jnp.int32(2**30)
+
+    def slot_id(t):
+        return ids_smem[t // C, t % C]
+
+    def row_copy(t):
+        return pltpu.make_async_copy(
+            table_ref.at[slot_id(t)], xbuf.at[t], sems.at[t % window]
+        )
+
+    def start(t):
+        @pl.when(slot_id(t) >= 0)
+        def _():
+            row_copy(t).start()
+
+    def wait(t):
+        @pl.when(slot_id(t) >= 0)
+        def _():
+            row_copy(t).wait()
+
+    # software-pipelined gather: keep up to `window` row DMAs in flight
+    def fill_loop(t, carry):
+        @pl.when(t >= window)
+        def _():
+            wait(t - window)
+
+        start(t)
+        return carry
+
+    jax.lax.fori_loop(0, total, fill_loop, 0)
+
+    def drain(t, carry):
+        wait(t)
+        return carry
+
+    jax.lax.fori_loop(max(0, total - window), total, drain, 0)
+
+    ids = ids_vmem[...]                                   # [bb, C]
+    du = du_ref[...]                                      # [bb, C]
+    x = xbuf[...].astype(jnp.float32)                     # [bb*C, d]
+    xx = jnp.sum(x * x, axis=1).reshape(bb, C)            # [bb, C]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bb, C), 1)
+    valid = (ids >= 0) & jnp.isfinite(du)
+
+    # first-occurrence dedup in (du, position) order: same winner as the
+    # oracle's stable distance sort followed by keep-first-id
+    pos_i = jax.lax.broadcasted_iota(jnp.int32, (bb, C, C), 1)
+    pos_j = jax.lax.broadcasted_iota(jnp.int32, (bb, C, C), 2)
+    same = ids[:, :, None] == ids[:, None, :]
+    earlier = (du[:, :, None] < du[:, None, :]) | (
+        (du[:, :, None] == du[:, None, :]) & (pos_i < pos_j)
+    )
+    dup = jnp.any(
+        same & earlier & valid[:, :, None] & valid[:, None, :], axis=1
+    )
+    valid &= ~dup
+
+    # -- keep-set recurrence + fill, one masked-argmin sweep per slot -------
+    supp = jnp.zeros((bb, C), bool)
+    taken = jnp.zeros((bb, C), bool)
+    outs = []
+    for _ in range(m):
+        avail = valid & ~taken
+        keepable = avail & ~supp
+        fillable = (avail & supp) if fill else jnp.zeros_like(avail)
+        cls = jnp.where(keepable, 0, jnp.where(fillable, 1, 2))
+        cmin = jnp.min(cls, axis=1, keepdims=True)        # [bb, 1]
+        cand = (cls == cmin) & (cmin < 2)
+        dmask = jnp.where(cand, du, jnp.inf)
+        dmin = jnp.min(dmask, axis=1, keepdims=True)
+        p = jnp.min(
+            jnp.where(cand & (dmask == dmin), pos, big), axis=1,
+            keepdims=True,
+        )                                                 # [bb, 1]
+        onehot = pos == p                                 # no hit when big
+        has = cmin < 2
+        out_t = jnp.max(
+            jnp.where(onehot, ids, jnp.iinfo(jnp.int32).min),
+            axis=1, keepdims=True,
+        )
+        outs.append(jnp.where(has, out_t, jnp.int32(-1)))
+        # the selected keep's cc column, computed lazily: one MXU pass of
+        # the whole gathered chunk against the selected vector (overcompute
+        # factor bb, the gather_distance diagonal trick)
+        vsel = jnp.sum(
+            jnp.where(onehot[:, :, None], x.reshape(bb, C, -1), 0.0), axis=1
+        )                                                 # [bb, d]
+        xx_sel = jnp.sum(jnp.where(onehot, xx, 0.0), axis=1, keepdims=True)
+        dots = jax.lax.dot_general(
+            x, vsel, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(bb, C, bb)
+        row_q = jax.lax.broadcasted_iota(jnp.int32, (bb, C, bb), 0)
+        col_q = jax.lax.broadcasted_iota(jnp.int32, (bb, C, bb), 2)
+        xy = jnp.sum(jnp.where(row_q == col_q, dots, 0.0), axis=2)
+        cc = jnp.maximum(xx - 2.0 * xy + xx_sel, 0.0)
+        is_keep = has & (cmin == 0)
+        supp |= is_keep & (alpha * cc < du)
+        taken |= onehot
+    o_ref[...] = jnp.concatenate(outs, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "alpha", "fill", "block_b", "window", "interpret"),
+)
+def prune_kernel_call(
+    cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True, block_b=8,
+    window=16, interpret=False,
+):
+    """cand_ids int32[B, C] (-1 masked), cand_dists f32[B, C] (inf masked),
+    table [n, d] -> int32[B, m] pruned neighbor ids, -1 padded.
+
+    Pads B to the ``block_b`` row-tile multiple and d to the 128 lane width
+    internally (zero columns are exact for squared L2); the table is passed
+    un-blocked so each candidate is one contiguous row DMA.
+    """
+    B, C = cand_ids.shape
+    n, d = table.shape
+    bb = min(block_b, max(8, B))
+    ids = cand_ids.astype(jnp.int32)
+    du = cand_dists.astype(jnp.float32)
+
+    def pad_to(a, mult, axis, value=0):
+        r = (-a.shape[axis]) % mult
+        if r == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(a, widths, constant_values=value)
+
+    idp = pad_to(ids, bb, 0, value=-1)
+    dup_ = pad_to(du, bb, 0, value=jnp.inf)
+    tp = pad_to(table, 128, 1)
+    grid = (idp.shape[0] // bb,)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _prune_kernel, bb=bb, C=C, m=m, alpha=alpha, fill=fill,
+            window=min(window, bb * C),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, C), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((bb, C), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((bb, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((idp.shape[0], m), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bb * C, tp.shape[1]), table.dtype),
+            pltpu.SemaphoreType.DMA((min(window, bb * C),)),
+        ],
+        interpret=interpret,
+    )(idp, idp, dup_, tp)
+    return out[:B]

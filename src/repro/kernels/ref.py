@@ -12,7 +12,7 @@ from repro.core import segment_tree
 
 __all__ = [
     "pairwise_dist", "gather_dist", "select_edges", "edge_scan_valid",
-    "attention",
+    "prune", "prune_vecs", "attention",
 ]
 
 # plain int: safe to reference from inside any trace
@@ -147,6 +147,91 @@ def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True):
 
     _, outs = jax.lax.scan(step, prio, None, length=m_out)
     return outs.T                                         # [F, m_out]
+
+
+def prune(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True):
+    """Lazy-column RNG prune (paper Def. 2.1) for a chunk of build nodes.
+
+    ``cand_ids`` int32[B, C] candidate ids into ``table`` (-1 invalid);
+    ``cand_dists`` f32[B, C] squared distance to the chunk's node u (inf for
+    invalid slots); ``table`` f32[n, d] the full vector table. Returns
+    int32[B, m] pruned neighbor ids, -1 padded — the semantic contract of
+    the Pallas construction-prune kernel and the off-TPU production path.
+
+    Matches ``core/rng.py::prune`` (the eager oracle) in kept ids but never
+    materializes the ``[C, C]`` candidate-candidate distance matrix: the
+    sequential keep-set recurrence is flipped into at most ``m`` masked-argmin
+    sweeps. Each sweep selects the nearest still-live candidate by
+    ``(class, du, position)`` — class 0 while unsuppressed candidates remain,
+    class 1 for the HNSW-style fill of pruned survivors — and, when the
+    selection is a *keep*, computes that single candidate's distance column
+    ``cc[:, j]`` on the fly (same ``xx_i - 2 x_i.x_j + xx_j`` expansion as the
+    oracle's ``pairwise_sq_dists``) to grow the suppressed set. Keeps are
+    selected in ascending distance order, so a candidate's suppression state
+    at selection time equals the oracle's scan state; suppression never
+    shrinks, so every keep step precedes every fill step and the emitted
+    order matches the oracle's keep-then-fill key sort. O(m * C * d) work
+    instead of O(C^2 * d), with only [C] live columns.
+    """
+    vecs = table[jnp.maximum(cand_ids, 0)]                # [B, C, d]
+    return prune_vecs(
+        cand_ids, cand_dists, vecs, m=m, alpha=alpha, fill=fill
+    )
+
+
+def prune_vecs(cand_ids, cand_dists, cand_vecs, *, m, alpha=1.0, fill=True):
+    """``prune`` for callers that already gathered ``cand_vecs`` [B, C, d]
+    (the build loop materializes it to compute ``cand_dists`` anyway)."""
+    cand_ids = cand_ids.astype(jnp.int32)
+    cand_dists = cand_dists.astype(jnp.float32)
+    vecs = cand_vecs.astype(jnp.float32)
+    return jax.vmap(
+        lambda i, du, x: _prune_row(i, du, x, m=m, alpha=alpha, fill=fill)
+    )(cand_ids, cand_dists, vecs)
+
+
+def _prune_row(ids, du, vecs, *, m, alpha, fill):
+    """One node's lazy-column prune: ids[C], du[C], vecs[C, d] -> int32[m]."""
+    C = ids.shape[0]
+    pos = jnp.arange(C, dtype=jnp.int32)
+    valid = (ids >= 0) & jnp.isfinite(du)
+    # first-occurrence dedup in (du, position) order — the same winner as the
+    # oracle's stable distance sort followed by keep-first-id
+    same = ids[:, None] == ids[None, :]
+    earlier = (du[:, None] < du[None, :]) | (
+        (du[:, None] == du[None, :]) & (pos[:, None] < pos[None, :])
+    )
+    dup = jnp.any(
+        same & earlier & valid[:, None] & valid[None, :], axis=0
+    )
+    valid &= ~dup
+    xx = jnp.sum(vecs * vecs, axis=-1)                    # [C]
+
+    def step(carry, _):
+        supp, taken = carry
+        avail = valid & ~taken
+        keepable = avail & ~supp
+        fillable = (avail & supp) if fill else jnp.zeros_like(avail)
+        cls = jnp.where(keepable, 0, jnp.where(fillable, 1, 2))
+        cmin = jnp.min(cls)
+        cand = (cls == cmin) & (cmin < 2)
+        dmask = jnp.where(cand, du, jnp.inf)
+        dmin = jnp.min(dmask)
+        p = jnp.min(jnp.where(cand & (dmask == dmin), pos, _BIG))
+        has = cmin < 2
+        p_safe = jnp.where(has, p, 0)
+        out_t = jnp.where(has, ids[p_safe], jnp.int32(-1))
+        # the selected keep's cc column, computed lazily (oracle's expansion)
+        xy = jnp.einsum("cd,d->c", vecs, vecs[p_safe])
+        cc = jnp.maximum(xx - 2.0 * xy + xx[p_safe], 0.0)
+        is_keep = has & (cmin == 0)
+        supp |= is_keep & (alpha * cc < du)
+        taken |= pos == p
+        return (supp, taken), out_t
+
+    init = (jnp.zeros((C,), bool), jnp.zeros((C,), bool))
+    _, outs = jax.lax.scan(step, init, None, length=m)
+    return outs
 
 
 def attention(

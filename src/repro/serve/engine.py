@@ -15,7 +15,16 @@ import numpy as np
 
 from repro.core.index import RangeGraphIndex
 
-__all__ = ["Request", "Result", "ServingEngine"]
+__all__ = ["Request", "Result", "ServingEngine", "bucket_k"]
+
+
+def bucket_k(k_req: int, k_bucket: int, ef: int) -> int:
+    """Round a requested k up to the next ``k_bucket`` multiple, clamped to
+    ef, so mixed-k workloads hit a bounded set of compiled programs instead
+    of one retrace per distinct k (k is a static arg of the jitted search).
+    The one rounding rule shared by ``ServingEngine`` and the benchmark
+    harness (``benchmarks/common.make_searcher``)."""
+    return min(ef, k_bucket * max(1, -(-k_req // k_bucket)))
 
 
 @dataclasses.dataclass
@@ -54,12 +63,10 @@ class ServingEngine:
         self.stats = {"served": 0, "batches": 0, "wall_s": 0.0, "compiles": 0}
 
     def _bucket_k(self, k_req: int) -> int:
-        """Round the requested k up to the next k_bucket multiple so mixed-k
-        workloads hit a bounded set of compiled programs instead of one
-        retrace per distinct k. Clamped to ef: the result list only holds ef
-        candidates (top_k(k > ef) would crash), and submit() rejects
-        requests asking for more than ef."""
-        return min(self.ef, self.k_bucket * max(1, -(-k_req // self.k_bucket)))
+        """``bucket_k`` with this engine's knobs. Clamped to ef: the result
+        list only holds ef candidates (top_k(k > ef) would crash), and
+        submit() rejects requests asking for more than ef."""
+        return bucket_k(k_req, self.k_bucket, self.ef)
 
     def submit(self, req: Request):
         if req.k > self.ef:

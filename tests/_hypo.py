@@ -5,7 +5,8 @@ is absent (this container does not ship it) a minimal deterministic fallback
 runs the same oracle checks over a fixed seed grid: ``@given`` re-runs the
 test body ``min(max_examples, 25)`` times, drawing values from a seeded
 ``numpy`` Generator. Only the API surface the tests use is implemented
-(``st.integers``, ``st.data``, positional/keyword ``@given``, ``@settings``).
+(``st.integers``, ``st.booleans``, ``st.sampled_from``, ``st.data``,
+positional/keyword ``@given``, ``@settings``).
 """
 from __future__ import annotations
 
@@ -44,6 +45,17 @@ except ImportError:
         def integers(min_value, max_value):
             return _Strategy(
                 lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))]
             )
 
         @staticmethod

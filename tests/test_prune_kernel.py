@@ -1,0 +1,158 @@
+"""Fused construction prune must match the eager oracle bit-for-bit.
+
+Three formulations are pinned against each other:
+
+  * ``core/rng.py::prune``       — eager [C, C] matrix + C-step scan (the
+    historical build path, kept as the oracle);
+  * ``kernels/ref.py::prune``    — lazy-column jnp formulation (impl="xla");
+  * ``kernels/prune.py``         — the Pallas kernel in interpret mode
+    (impl="pallas"). Kept ids must be *bit-identical* across all of them —
+    including duplicate candidates, all-invalid rows, ``alpha > 1`` and
+    ``fill=False`` — and the full ``build_neighbor_table`` output must be
+    invariant to both the prune backend and the chunk size.
+"""
+import numpy as np
+from _hypo import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import rng as rng_mod
+from repro.core.build import BuildConfig, build_neighbor_table
+from repro.kernels import ops
+
+
+def oracle_prune(ids, du, table_np, m, alpha, fill):
+    """rng.prune per row, fed the eager [C, C] matrix it expects."""
+    cvec = table_np[np.maximum(ids, 0)]
+    cc = rng_mod.pairwise_sq_dists(jnp.asarray(cvec))
+    return np.stack([
+        np.asarray(rng_mod.prune(
+            jnp.asarray(ids[i]), jnp.asarray(du[i]), cc[i],
+            m=m, alpha=alpha, fill=fill,
+        ))
+        for i in range(ids.shape[0])
+    ])
+
+
+def _draw_case(data):
+    """Random (ids, du, table) with duplicate candidates + invalid slots."""
+    B = data.draw(st.integers(1, 6))
+    C = data.draw(st.integers(2, 24))
+    d = data.draw(st.integers(2, 12))
+    m = data.draw(st.integers(1, 8))
+    n = data.draw(st.integers(C, 64))
+    seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(seed)
+    table = rng.standard_normal((n, d)).astype(np.float32)
+    ids = rng.integers(0, n, (B, C)).astype(np.int32)
+    # duplicate a slot per row (same id -> same vector -> same distance)
+    src = rng.integers(0, C, B)
+    dst = rng.integers(0, C, B)
+    ids[np.arange(B), dst] = ids[np.arange(B), src]
+    ids = np.where(rng.random((B, C)) < 0.25, -1, ids).astype(np.int32)
+    u = rng.standard_normal((B, d)).astype(np.float32)
+    cvec = table[np.maximum(ids, 0)]
+    du = ((cvec - u[:, None, :]) ** 2).sum(-1).astype(np.float32)
+    du = np.where(ids < 0, np.inf, du)
+    return ids, du, table, m
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_lazy_xla_bit_identical_to_oracle(data):
+    ids, du, table, m = _draw_case(data)
+    alpha = data.draw(st.sampled_from([1.0, 1.25, 2.0]))
+    fill = data.draw(st.booleans())
+    want = oracle_prune(ids, du, table, m, alpha, fill)
+    got = np.asarray(ops.prune(
+        jnp.asarray(ids), jnp.asarray(du), jnp.asarray(table),
+        m=m, alpha=alpha, fill=fill, impl="xla",
+    ))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_pallas_kernel_bit_identical_to_oracle(data):
+    ids, du, table, m = _draw_case(data)
+    alpha = data.draw(st.sampled_from([1.0, 1.25]))
+    fill = data.draw(st.booleans())
+    want = oracle_prune(ids, du, table, m, alpha, fill)
+    got = np.asarray(ops.prune(
+        jnp.asarray(ids), jnp.asarray(du), jnp.asarray(table),
+        m=m, alpha=alpha, fill=fill, impl="pallas",
+    ))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_legacy_dispatch_bit_identical_to_oracle(data):
+    """ops.prune(impl="legacy") is the oracle path modulo the in-jit gather."""
+    ids, du, table, m = _draw_case(data)
+    want = oracle_prune(ids, du, table, m, 1.0, True)
+    got = np.asarray(ops.prune(
+        jnp.asarray(ids), jnp.asarray(du), jnp.asarray(table),
+        m=m, alpha=1.0, fill=True, impl="legacy",
+    ))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_all_invalid_rows_and_short_candidate_lists():
+    table = np.eye(4, dtype=np.float32)
+    ids = np.array([[-1, -1, -1], [2, -1, 1]], np.int32)
+    du = np.where(ids < 0, np.inf, 1.0).astype(np.float32)
+    for impl in ("xla", "pallas", "legacy"):
+        got = np.asarray(ops.prune(
+            jnp.asarray(ids), jnp.asarray(du), jnp.asarray(table),
+            m=5, alpha=1.0, fill=True, impl=impl,
+        ))
+        assert got.shape == (2, 5)
+        assert (got[0] == -1).all()
+        # fewer valid candidates than m: kept ids then -1 padding
+        assert set(got[1][got[1] >= 0].tolist()) <= {1, 2}
+        np.testing.assert_array_equal(got[1][2:], [-1, -1, -1])
+
+
+def test_fill_pads_with_nearest_pruned_all_backends():
+    # three collinear points: the middle one prunes the far one
+    table = np.array([[1, 0], [2, 0], [10, 0], [0, 0]], np.float32)
+    ids = np.array([[0, 1, 2]], np.int32)
+    du = ((table[:3] - table[3]) ** 2).sum(1)[None].astype(np.float32)
+    for impl in ("xla", "pallas", "legacy"):
+        nofill = np.asarray(ops.prune(
+            jnp.asarray(ids), jnp.asarray(du), jnp.asarray(table),
+            m=3, fill=False, impl=impl,
+        ))[0]
+        fl = np.asarray(ops.prune(
+            jnp.asarray(ids), jnp.asarray(du), jnp.asarray(table),
+            m=3, fill=True, impl=impl,
+        ))[0]
+        assert [int(x) for x in nofill] == [0, -1, -1], impl
+        assert [int(x) for x in fl] == [0, 1, 2], impl
+
+
+def test_build_table_invariant_to_backend_and_chunk():
+    """The full build output is bit-identical across prune backends and
+    chunk sizes (chunking must not leak into per-node results)."""
+    rng = np.random.default_rng(7)
+    vectors = rng.standard_normal((256, 16)).astype(np.float32)
+    cfg = dict(m=6, ef_construction=16, brute_threshold=32)
+    want = build_neighbor_table(
+        vectors, BuildConfig(**cfg, chunk=128, prune_impl="legacy")
+    )
+    for impl, chunk in (("xla", 128), ("xla", 48), ("legacy", 48)):
+        got = build_neighbor_table(
+            vectors, BuildConfig(**cfg, chunk=chunk, prune_impl=impl)
+        )
+        np.testing.assert_array_equal(got, want, err_msg=f"{impl}/{chunk}")
+
+
+def test_dispatch_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PRUNE_IMPL", "legacy")
+    assert ops.default_impl("prune") == "legacy"
+    monkeypatch.setenv("REPRO_IMPL", "xla")
+    assert ops.default_impl("prune") == "legacy"  # specific var wins
+    assert ops.default_impl("edge") == "xla"
+    monkeypatch.delenv("REPRO_PRUNE_IMPL")
+    assert ops.default_impl("prune") == "xla"
