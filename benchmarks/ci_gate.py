@@ -8,8 +8,12 @@ against the committed full-shape records (``BENCH_hotpath.json``,
   * **shape / correctness — hard fail** (exit 1): a smoke artifact is
     missing or unparseable (the benchmark crashed), its schema lost a
     required section (a refactor silently dropped a measurement), a
-    fused-vs-baseline speedup is non-finite, or the build benchmark's
-    backend-parity check reported a divergence.
+    fused-vs-baseline speedup is non-finite, the build benchmark's
+    backend-parity check reported a divergence, or the compact-storage
+    section regressed — footprint ratio above ``--max-footprint-ratio``
+    (default 0.55), |recall@10 delta| above ``--max-recall-delta``
+    (default 0.01), or neighbor-codec ids not bit-identical. Footprint and
+    parity are deterministic, so they hard-fail even on shared runners.
   * **timing — soft warn** (exit 0, GitHub warning annotation): a smoke
     fused-vs-baseline ratio regressed more than ``--tolerance`` (default
     25%) relative to the committed record. Smoke shapes are tiny and shared
@@ -89,6 +93,45 @@ def _baseline(committed, section, key, label, errors):
     return _ratio(committed, section, key, label, errors)
 
 
+def _check_storage(smoke, name, args, errors):
+    """Compact-storage gate: deterministic, so every violation is hard.
+
+    The footprint ratio is pure arithmetic over array dtypes and the codec
+    bit-identity is integer-exact — runner noise cannot move them — and the
+    recall delta at the pinned smoke config is reproducible, so all three
+    hard-fail (unlike the timing ratios above).
+    """
+    sf = smoke.get("storage_footprint")
+    if not isinstance(sf, dict):
+        errors.append(f"{name}: storage_footprint section missing")
+        return
+    ratio = sf.get("footprint_ratio")
+    if not isinstance(ratio, (int, float)) or not math.isfinite(ratio):
+        errors.append(f"{name}: storage_footprint.footprint_ratio "
+                      f"= {ratio!r} not a finite ratio")
+    elif ratio > args.max_footprint_ratio:
+        errors.append(
+            f"{name}: compact/f32 footprint ratio {ratio:.3f} exceeds "
+            f"{args.max_footprint_ratio} (compact storage stopped paying "
+            "for itself)")
+    else:
+        print(f"ok: {name} footprint ratio {ratio:.3f} "
+              f"<= {args.max_footprint_ratio}")
+    delta = sf.get("recall_delta")
+    if not isinstance(delta, (int, float)) or not math.isfinite(delta):
+        errors.append(f"{name}: storage_footprint.recall_delta "
+                      f"= {delta!r} not finite")
+    elif abs(delta) > args.max_recall_delta:
+        errors.append(
+            f"{name}: compact recall@10 delta {delta:+.4f} exceeds "
+            f"±{args.max_recall_delta}")
+    else:
+        print(f"ok: {name} compact recall delta {delta:+.4f}")
+    if sf.get("neighbor_codec_ids_identical") is not True:
+        errors.append(
+            f"{name}: int16/int32 neighbor codecs returned different ids")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=0.25,
@@ -96,6 +139,11 @@ def main(argv=None):
     ap.add_argument("--strict", action="store_true",
                     help="timing regressions fail instead of warning "
                          "(dedicated hardware only)")
+    ap.add_argument("--max-footprint-ratio", type=float, default=0.55,
+                    help="max compact/f32 nbytes ratio (hard fail)")
+    ap.add_argument("--max-recall-delta", type=float, default=0.01,
+                    help="max |recall@10 drift| under compact storage "
+                         "(hard fail)")
     args = ap.parse_args(argv)
 
     errors: list[str] = []
@@ -109,6 +157,8 @@ def main(argv=None):
         # correctness flags are hard: a parity divergence is a real bug
         if smoke.get("parity") is False or committed.get("parity") is False:
             errors.append(f"{smoke_name}: backend parity check failed")
+        if smoke_name == "BENCH_hotpath_smoke.json":
+            _check_storage(smoke, smoke_name, args, errors)
         for section, key in keys:
             want = _baseline(committed, section, key, committed_name, errors)
             got = _ratio(smoke, section, key, smoke_name, errors)

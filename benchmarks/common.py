@@ -36,8 +36,15 @@ class Workload:
     queries: np.ndarray
 
 
-def build_index(name: str, *, m=16, efc=64, seed=0) -> RangeGraphIndex:
-    key = (name, m, efc, seed)
+def build_index(name: str, *, m=16, efc=64, seed=0,
+                storage=None) -> RangeGraphIndex:
+    """``storage``: optional ``StorageConfig`` (compact-storage sweeps)."""
+    from repro.core import storage as storage_mod
+
+    # resolve before keying so storage=None and an equal explicit config
+    # share one cached build
+    storage = storage or storage_mod.default_config()
+    key = (name, m, efc, seed, storage)
     if key not in _CACHE:
         n, dim, attr_kind = BENCH_DATASETS[name]
         vectors, attrs, _ = vector_dataset(
@@ -46,6 +53,7 @@ def build_index(name: str, *, m=16, efc=64, seed=0) -> RangeGraphIndex:
         _CACHE[key] = RangeGraphIndex.build(
             vectors, attrs[:, 0],
             BuildConfig(m=m, ef_construction=efc),
+            storage=storage,
         )
     return _CACHE[key]
 

@@ -18,6 +18,12 @@ Three measurements, emitted to ``artifacts/BENCH_hotpath.json``:
   * ``search_sweep`` — end-to-end ``search_ranks`` qps/recall over
     ``expand_width`` in {1, 2, 4, 8} and over ``edge_impl`` backends on a
     CPU-tractable index, giving future PRs a perf trajectory.
+  * ``storage_footprint`` — the compact-storage trade (``core/storage.py``):
+    real ``nbytes`` of the same index under f32/int32 vs bf16/int16 storage
+    (the two tables every hop reads, so the ratio is also the hop-bandwidth
+    ratio), qps + recall@10 at both, and a bit-identity probe of the
+    neighbor codec. ``ci_gate.py`` hard-fails when the ratio exceeds 0.55
+    or the recall delta exceeds 0.01.
 
 Usage: ``PYTHONPATH=src python benchmarks/hotpath.py [--no-sweep] [--b 64]
 [--n 100000] [--d 128] [--m 16] [--iters 50] [--smoke]``
@@ -44,6 +50,7 @@ from common import DEFAULT_K, artifacts_dir, build_index, carry_smoke_ref, \
     make_searcher, make_workload, measure, time_it, update_smoke_ref
 from repro.core import bitset
 from repro.core import edge_select as edge_select_mod
+from repro.core import storage as storage_mod
 from repro.core.search import _pairdist
 from repro.kernels import ops
 
@@ -166,6 +173,54 @@ def bench_search_sweep(widths=(1, 2, 4, 8), edge_impls=("argsort", "xla"),
     return rows
 
 
+def bench_storage_footprint(dataset="wit-like", n_queries=64):
+    """Footprint + hot-path cost of compact storage vs the f32 baseline.
+
+    The compact index is the SAME graph re-encoded (``astype_storage``), so
+    the recall delta isolates bf16 vector quantization, and neighbor ids are
+    checked bit-identical across the int16/int32 codecs (the decode is a
+    plain -1-preserving widening cast).
+    """
+    # pin the baseline storage explicitly so a REPRO_STORAGE=compact CI leg
+    # still measures compact against true f32/int32
+    idx32 = build_index(dataset, storage=storage_mod.StorageConfig())
+    compact = storage_mod.StorageConfig.compact()
+    idxc = idx32.astype_storage(compact)
+    wl = make_workload(idx32, "mixed", n_queries=n_queries)
+    out = {
+        "dataset": dataset,
+        "f32_bytes": int(idx32.nbytes),
+        "compact_bytes": int(idxc.nbytes),
+        "footprint_ratio": idxc.nbytes / idx32.nbytes,
+        "vector_dtype": str(idxc.vectors.dtype),
+        "neighbor_dtype": str(idxc.neighbors.dtype),
+        "hop_tables_bytes": {
+            "f32": int(idx32.vectors.nbytes + idx32.neighbors.nbytes),
+            "compact": int(idxc.vectors.nbytes + idxc.neighbors.nbytes),
+        },
+    }
+    for tag, idx in (("f32", idx32), ("compact", idxc)):
+        # ground truth always comes from the f32 index: recall_delta must
+        # see quantization-induced loss, not a self-consistent compact gt
+        r = measure(make_searcher(idx, ef=64), wl, idx32, k=DEFAULT_K)
+        out[tag] = {k: float(v) for k, v in r.items()}
+    out["recall_delta"] = out["compact"]["recall"] - out["f32"]["recall"]
+    # int16 vs int32 neighbor storage with identical vectors: ids must be
+    # bit-identical end-to-end (the acceptance criterion ci_gate enforces)
+    idx16 = idx32.astype_storage(
+        storage_mod.StorageConfig(neighbor_dtype="int16")
+    )
+    nq = min(16, len(wl.queries))
+    a = idx32.search_ranks(wl.queries[:nq], wl.L[:nq], wl.R[:nq],
+                           k=DEFAULT_K, ef=64)
+    b = idx16.search_ranks(wl.queries[:nq], wl.L[:nq], wl.R[:nq],
+                           k=DEFAULT_K, ef=64)
+    out["neighbor_codec_ids_identical"] = bool(
+        np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    )
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--b", type=int, default=64)
@@ -213,6 +268,20 @@ def main(argv=None):
         f"sort-free {edge['sortfree_us']:.1f}us  ({edge['speedup']:.2f}x)"
     )
 
+    if args.smoke:
+        storage = bench_storage_footprint("ytaudio-like", n_queries=16)
+    else:
+        storage = bench_storage_footprint("wit-like", n_queries=64)
+    print(
+        f"storage {storage['dataset']}: f32 {storage['f32_bytes']/1e6:.2f}MB"
+        f" -> compact {storage['compact_bytes']/1e6:.2f}MB "
+        f"(ratio {storage['footprint_ratio']:.3f}, "
+        f"{storage['vector_dtype']}/{storage['neighbor_dtype']}) "
+        f"recall {storage['f32']['recall']:.3f} -> "
+        f"{storage['compact']['recall']:.3f} "
+        f"qps {storage['f32']['qps']:.1f} -> {storage['compact']['qps']:.1f}"
+    )
+
     sweep = None
     if not args.no_sweep:
         if args.smoke:
@@ -245,6 +314,7 @@ def main(argv=None):
         },
         "expansion_step": step,
         "edge_select_step": edge,
+        "storage_footprint": storage,
         "search_sweep": sweep,
     }
     # smoke numbers are meaningless; never clobber the real perf record

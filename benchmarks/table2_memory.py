@@ -1,15 +1,20 @@
-"""Paper Table 2: memory footprint per method (index + raw vectors)."""
+"""Paper Table 2: memory footprint per method (index + raw vectors),
+including the compact-storage encoding (bf16 vectors + narrow neighbor
+ids, ``core/storage.py``) of the same index."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common
+from repro.core import storage as storage_mod
 
 
 def run(quick=False):
     rows = []
     for ds in list(common.BENCH_DATASETS)[: 1 if quick else None]:
-        index = common.build_index(ds)
+        # pin the baseline: under REPRO_STORAGE=compact the default build
+        # would already be compact and compact_over_f32 would report ~1.0
+        index = common.build_index(ds, storage=storage_mod.StorageConfig())
         raw = index.vectors.nbytes
         elemental = index.neighbors.nbytes
         n, layers, m = index.neighbors.shape
@@ -17,6 +22,15 @@ def run(quick=False):
         rows.append((
             "table2", ds, "iRangeGraph_mb",
             round((raw + elemental + index.attrs.nbytes) / 1e6, 2),
+        ))
+        compact = index.astype_storage(storage_mod.StorageConfig.compact())
+        rows.append((
+            "table2", ds, "iRangeGraph_compact_mb",
+            round(compact.nbytes / 1e6, 2),
+        ))
+        rows.append((
+            "table2", ds, "compact_over_f32",
+            round(compact.nbytes / index.nbytes, 3),
         ))
         # single flat graph (Milvus/HNSW-style baseline): one layer of edges
         rows.append((

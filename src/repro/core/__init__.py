@@ -2,11 +2,13 @@
 from repro.core.build import BuildConfig, build_flat_graph, build_neighbor_table
 from repro.core.index import RangeGraphIndex, recall
 from repro.core.search import SearchResult, search_improvised
+from repro.core.storage import StorageConfig
 
 __all__ = [
     "BuildConfig",
     "RangeGraphIndex",
     "SearchResult",
+    "StorageConfig",
     "build_flat_graph",
     "build_neighbor_table",
     "recall",

@@ -24,6 +24,7 @@ import numpy as np
 from repro.core import build as build_mod
 from repro.core import search as search_mod
 from repro.core import segment_tree
+from repro.core import storage as storage_mod
 from repro.core.index import RangeGraphIndex
 
 __all__ = [
@@ -151,7 +152,8 @@ def super_postfilter(
             int(L[i]), int(R[i]), index.logn
         )
     vec = jnp.asarray(index.vectors)
-    nbrs = jnp.asarray(index.neighbors)
+    # raw row-gather nbr_fn below: decode the compact codec at this edge
+    nbrs = storage_mod.decode_neighbors(jnp.asarray(index.neighbors))
     Lj = jnp.asarray(L, jnp.int32)
     Rj = jnp.asarray(R, jnp.int32)
     out_ids = jnp.full((B, k), -1, jnp.int32)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import search as search_mod
+from repro.core import storage as storage_mod
 from repro.kernels import ops
 
 __all__ = ["BuildConfig", "build_neighbor_table", "build_flat_graph"]
@@ -105,13 +106,18 @@ def _reverse_pass(
 def build_neighbor_table(
     vectors: np.ndarray, cfg: BuildConfig | None = None, *, verbose=False,
     level_times: list | None = None,
+    storage: storage_mod.StorageConfig | None = None,
 ) -> np.ndarray:
-    """Build the packed elemental-graph table ``int32[n, layers, m]``.
+    """Build the packed elemental-graph table ``[n, layers, m]``.
 
     ``vectors`` must already be in attribute-rank order (see index.py).
     ``level_times``, if given a list, collects per-level wall-clock dicts
     (layer, segment size, kind, seconds) — the build-throughput record
     ``benchmarks/buildpath.py`` emits.
+
+    Construction scratch is int32; with ``storage`` the finished table is
+    emitted directly in the compact neighbor codec (int16 when ids fit,
+    ``-1`` sentinel unchanged — see ``core/storage.py``), otherwise int32.
     """
     cfg = cfg or BuildConfig()
     vectors = np.asarray(vectors, np.float32)
@@ -144,6 +150,8 @@ def build_neighbor_table(
         if verbose:
             deg = float((edges >= 0).sum(1).mean())
             print(f"  layer {lay:2d} seg_size {size:7d} mean_deg {deg:.1f}")
+    if storage is not None:
+        return storage_mod.encode_neighbors(nbrs, n, storage)
     return nbrs
 
 

@@ -14,7 +14,11 @@ single-machine algorithm, and the only cross-device traffic is the k-sized
 merge — O(B * k) per query batch, independent of n.
 
 ``rfann_serve_step`` is the paper-system dry-run cell: it lowers under the
-production mesh with vectors/neighbors sharded on the leading axis.
+production mesh with vectors/neighbors sharded on the leading axis. Shards
+may be ragged (``build_sharded`` pads the tail, bounds mask the padding)
+and may store compact dtypes (bf16 vectors / int16 neighbor ids,
+``core/storage.py``); ``shard_topk`` is the per-shard body shared by the
+shard_map path and mesh-free hosts.
 """
 from __future__ import annotations
 
@@ -27,59 +31,150 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import build as build_mod
 from repro.core import search as search_mod
+from repro.core import storage as storage_mod
 from repro.core.index import RangeGraphIndex
 
-__all__ = ["ShardedRangeIndex", "build_sharded", "rfann_serve_step"]
+__all__ = [
+    "ShardedRangeIndex", "build_sharded", "shard_topk", "merge_topk",
+    "rfann_serve_step",
+]
 
 
 class ShardedRangeIndex:
     """Host-side container for the per-shard artifacts (stacked arrays)."""
 
-    def __init__(self, vectors, neighbors, bounds, logn, m):
-        # vectors: [S, n_shard, d]; neighbors: [S, n_shard, layers, m]
-        # bounds:  [S, 2] global rank range per shard
+    def __init__(self, vectors, neighbors, bounds, logn, m, storage=None):
+        # vectors: [S, n_shard, d] in storage.vector_dtype
+        # neighbors: [S, n_shard, layers, m] in the neighbor codec dtype
+        # bounds:  [S, 2] global rank range per shard (inclusive; masks any
+        #          padded tail rows out of every query)
         self.vectors = vectors
         self.neighbors = neighbors
         self.bounds = bounds
         self.logn = logn
         self.m = m
+        # introspection only: default-derive from the arrays so the field
+        # can never contradict what is actually stored
+        self.storage = storage or storage_mod.StorageConfig(
+            vector_dtype=str(vectors.dtype),
+            neighbor_dtype=str(neighbors.dtype),
+        )
 
     @property
     def n_shards(self):
         return self.vectors.shape[0]
 
+    @property
+    def nbytes(self) -> int:
+        """Real stored footprint of the stacked per-shard tables."""
+        return (self.vectors.nbytes + self.neighbors.nbytes
+                + self.bounds.nbytes)
+
 
 def build_sharded(
     vectors: np.ndarray, attrs: np.ndarray, n_shards: int,
     cfg: build_mod.BuildConfig | None = None,
+    storage: storage_mod.StorageConfig | None = None,
 ) -> ShardedRangeIndex:
     """Sort globally by attribute, chunk into contiguous rank ranges, build
     one index per shard (embarrassingly parallel across hosts in a real
-    deployment)."""
+    deployment).
+
+    ``n_shards`` need not divide ``n``: shards are ``ceil(n / n_shards)``
+    wide and a ragged tail is padded by repeating its last vector row, with
+    ``bounds`` holding only the real rank range — the serve path clips every
+    query to ``[lo, hi]``, so padded rows are never entered, traversed into,
+    or returned. Every shard therefore shares one ``logn``/table shape.
+    """
     cfg = cfg or build_mod.BuildConfig()
+    storage = storage or storage_mod.default_config()
     n = vectors.shape[0]
+    if not 1 <= n_shards <= n:
+        raise ValueError(f"need 1 <= n_shards <= n, got S={n_shards} n={n}")
     order = np.argsort(attrs, kind="stable")
     vs = np.asarray(vectors, np.float32)[order]
-    per = n // n_shards
-    assert per * n_shards == n, "shard count must divide n"
+    per = -(-n // n_shards)  # ceil: the last shard may be ragged
     vlist, nlist, bounds = [], [], []
     logn = None
     for s in range(n_shards):
-        lo, hi = s * per, (s + 1) * per - 1
-        tbl = build_mod.build_neighbor_table(vs[lo : hi + 1], cfg)
-        vlist.append(vs[lo : hi + 1])
+        lo = s * per
+        hi = min(lo + per, n) - 1  # hi < lo marks an all-padding shard
+        sl = vs[lo : hi + 1] if hi >= lo else vs[:0]
+        if sl.shape[0] < per:
+            fill = sl[-1] if sl.shape[0] else vs[-1]
+            sl = np.concatenate(
+                [sl, np.broadcast_to(fill, (per - sl.shape[0], vs.shape[1]))]
+            )
+        tbl = build_mod.build_neighbor_table(sl, cfg, storage=storage)
+        vlist.append(storage_mod.encode_vectors(sl, storage))
         nlist.append(tbl)
         bounds.append((lo, hi))
         logn = tbl.shape[1] - 1
     return ShardedRangeIndex(
         np.stack(vlist), np.stack(nlist), np.asarray(bounds, np.int32),
-        logn, cfg.m,
+        logn, cfg.m, storage,
     )
 
 
+def shard_topk(
+    vec, nbr, bnd, q, Lq, Rq, *,
+    logn, m, ef, k, expand_width=4, dist_impl="auto", edge_impl="auto",
+):
+    """One shard's clipped local search -> global-id top-k candidates.
+
+    The per-shard body of ``rfann_serve_step``, factored out so the same
+    code path — including the compact-storage decode and the padded-tail /
+    empty-clip masking — runs under shard_map on a ``data`` mesh axis and
+    plain per-shard on hosts (tests, single-process serving).
+
+    vec [n_shard, d] (any storage dtype); nbr [n_shard, layers, m] (any
+    neighbor codec); bnd i32[2] the shard's real global rank range; q
+    [B, d]; Lq/Rq i32[B] global rank ranges. Returns (ids, dists) [B, k]
+    with ids global (-1 padded) and dists inf-padded.
+    """
+    # compact storage: ids widen through the one -1-preserving decode
+    # (core/storage.py); vectors stay bf16/f16 down to the kernels
+    nbr = storage_mod.decode_neighbors(nbr)
+    lo, hi = bnd[0], bnd[1]
+    # clip the global range to this shard's rank range, local coords;
+    # hi is the REAL range end, so any padded tail rows stay > Rl and are
+    # never entered, traversed into, or returned
+    Ll = jnp.clip(Lq - lo, 0, vec.shape[0] - 1).astype(jnp.int32)
+    Rl = (jnp.minimum(Rq, hi) - lo).astype(jnp.int32)
+    empty = (Rq < lo) | (Lq > hi)
+    # an empty clip becomes the L > R range, which yields no entry
+    # points and therefore no results
+    Ll = jnp.where(empty, 1, Ll)
+    Rl = jnp.where(empty, 0, Rl)
+    res = search_mod.search_improvised(
+        vec, nbr, q, Ll, Rl,
+        logn=logn, m_out=m, ef=ef, k=k, expand_width=expand_width,
+        dist_impl=dist_impl, edge_impl=edge_impl,
+    )
+    ids = jnp.where(
+        (res.ids >= 0) & ~empty[:, None], res.ids + lo, -1
+    )
+    dists = jnp.where(ids >= 0, res.dists, jnp.inf)
+    return ids, dists
+
+
+def merge_topk(all_ids, all_d, k):
+    """Merge stacked per-shard candidates [S, B, k] -> global top-k [B, k].
+
+    The one merge both the all-gather path and host-side consumers use.
+    """
+    S, B = all_ids.shape[0], all_ids.shape[1]
+    flat_i = jnp.moveaxis(all_ids, 0, 1).reshape(B, S * k)
+    flat_d = jnp.moveaxis(all_d, 0, 1).reshape(B, S * k)
+    _, take = jax.lax.top_k(-flat_d, k)
+    out_i = jnp.take_along_axis(flat_i, take, 1)
+    out_d = jnp.take_along_axis(flat_d, take, 1)
+    return out_i, out_d
+
+
 def rfann_serve_step(
-    shard_vectors,    # f32[S, n_shard, d]   sharded: ("data", None, None)
-    shard_neighbors,  # i32[S, n_shard, layers, m]  sharded likewise
+    shard_vectors,    # f32/bf16[S, n_shard, d]   sharded: ("data", None, None)
+    shard_neighbors,  # i32/i16[S, n_shard, layers, m]  sharded likewise
     shard_bounds,     # i32[S, 2]
     queries,          # f32[B, d]            sharded: ("model", None)
     L, R,             # i32[B] global rank ranges
@@ -99,41 +194,16 @@ def rfann_serve_step(
     query_spec = P(("pod", "model")) if have_pod else P("model")
 
     def local(vec, nbr, bnd, q, Lq, Rq):
-        vec = vec[0]          # [n_shard, d] (leading shard dim is mapped)
-        nbr = nbr[0]
-        if nbr.dtype != jnp.int32:
-            # compact storage (u/int16) uses dtype-max as the absent marker
-            sentinel = jnp.iinfo(nbr.dtype).max
-            nbr = jnp.where(nbr == sentinel, -1, nbr.astype(jnp.int32))
-        lo, hi = bnd[0, 0], bnd[0, 1]
-        # clip the global range to this shard's rank range, local coords
-        Ll = jnp.clip(Lq - lo, 0, vec.shape[0] - 1).astype(jnp.int32)
-        Rl = (jnp.minimum(Rq, hi) - lo).astype(jnp.int32)
-        empty = (Rq < lo) | (Lq > hi)
-        # an empty clip becomes the L > R range, which yields no entry
-        # points and therefore no results
-        Ll = jnp.where(empty, 1, Ll)
-        Rl = jnp.where(empty, 0, Rl)
-        res = search_mod.search_improvised(
-            vec, nbr, q, Ll, Rl,
-            logn=logn, m_out=m, ef=ef, k=k, expand_width=expand_width,
+        # leading shard dim is mapped over the data axis
+        ids, dists = shard_topk(
+            vec[0], nbr[0], bnd[0], q, Lq, Rq,
+            logn=logn, m=m, ef=ef, k=k, expand_width=expand_width,
             dist_impl=dist_impl, edge_impl=edge_impl,
         )
-        ids = jnp.where(
-            (res.ids >= 0) & ~empty[:, None], res.ids + lo, -1
-        )
-        dists = jnp.where(ids >= 0, res.dists, jnp.inf)
         # merge across the data axis: gather all shards' top-k
         all_ids = jax.lax.all_gather(ids, "data", axis=0)      # [S, B, k]
         all_d = jax.lax.all_gather(dists, "data", axis=0)
-        S = all_ids.shape[0]
-        B = ids.shape[0]
-        flat_i = jnp.moveaxis(all_ids, 0, 1).reshape(B, S * k)
-        flat_d = jnp.moveaxis(all_d, 0, 1).reshape(B, S * k)
-        _, take = jax.lax.top_k(-flat_d, k)
-        out_i = jnp.take_along_axis(flat_i, take, 1)
-        out_d = jnp.take_along_axis(flat_d, take, 1)
-        return out_i, out_d
+        return merge_topk(all_ids, all_d, k)
 
     fn = jax.shard_map(
         local,

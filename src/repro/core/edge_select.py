@@ -58,7 +58,9 @@ def select_edges(nbrs_u, u, L, R, *, logn, m_out, skip_layers=True):
     layers, m = nbrs_u.shape
     mask = segment_tree.scan_mask(u, L, R, logn, skip_layers=skip_layers)
 
-    flat = nbrs_u.reshape(-1)
+    # compact (int16) rows widen here: -1 is the sentinel in every storage
+    # dtype, and _BIG below must not wrap in a narrow dtype
+    flat = nbrs_u.reshape(-1).astype(jnp.int32)
     lay_of = jnp.repeat(jnp.arange(layers, dtype=jnp.int32), m)
     valid = (
         (flat >= 0)

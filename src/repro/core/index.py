@@ -7,7 +7,10 @@ discussion), builds the packed elemental-graph table, and exposes:
   * ``search(queries, ranges, ...)`` — RFANN in attribute-VALUE space;
   * ``search_ranks(queries, L, R, ...)`` — RFANN in rank space;
   * value<->rank mapping via binary search (paper §2.2);
-  * serialization (msgpack + zstd, content-checksummed).
+  * serialization (msgpack + zstd, content-checksummed);
+  * compact storage (``core/storage.py``): vectors in bf16/f16 and neighbor
+    ids in int16 when they fit, decoded at the consumption edges —
+    ``nbytes`` reports the real footprint either way.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ from repro import compressio
 
 from repro.core import build as build_mod
 from repro.core import search as search_mod
+from repro.core import storage as storage_mod
 
 __all__ = ["RangeGraphIndex"]
 
@@ -33,18 +37,24 @@ def _pack_array(a: np.ndarray) -> dict:
 
 
 def _unpack_array(d: dict) -> np.ndarray:
-    return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+    # frombuffer views the msgpack bytes read-only; copy so a loaded index
+    # is equivalent to a built one (in-place consumers must not raise)
+    a = np.frombuffer(d["data"], dtype=storage_mod.np_dtype(d["dtype"]))
+    return a.reshape(d["shape"]).copy()
 
 
 @dataclasses.dataclass
 class RangeGraphIndex:
-    vectors: np.ndarray        # f32[n, d], rank order
+    vectors: np.ndarray        # [n, d] in storage.vector_dtype, rank order
     attrs: np.ndarray          # f64[n], sorted attribute values
     perm: np.ndarray           # original index of rank i
-    neighbors: np.ndarray      # int32[n, layers, m]
+    neighbors: np.ndarray      # [n, layers, m] in the neighbor codec dtype
     m: int
     logn: int
     build_cfg: build_mod.BuildConfig
+    storage: storage_mod.StorageConfig = dataclasses.field(
+        default_factory=storage_mod.StorageConfig
+    )
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -56,21 +66,48 @@ class RangeGraphIndex:
         *,
         verbose: bool = False,
         prune_impl: str | None = None,
+        storage: storage_mod.StorageConfig | None = None,
     ) -> "RangeGraphIndex":
         """``prune_impl`` overrides ``cfg.prune_impl`` (the construction-prune
-        backend: "auto" | "pallas" | "xla" | "legacy", see kernels/ops)."""
+        backend: "auto" | "pallas" | "xla" | "legacy", see kernels/ops).
+        ``storage`` picks the stored dtypes (default ``REPRO_STORAGE`` env or
+        f32); construction math always runs in f32."""
         cfg = cfg or build_mod.BuildConfig()
         if prune_impl is not None:
             cfg = dataclasses.replace(cfg, prune_impl=prune_impl)
+        storage = storage or storage_mod.default_config()
         vectors = np.asarray(vectors, np.float32)
         attrs = np.asarray(attrs, np.float64)
         n = vectors.shape[0]
         perm = np.argsort(attrs, kind="stable").astype(np.int64)
         vectors = np.ascontiguousarray(vectors[perm])
         attrs = attrs[perm]
-        nbrs = build_mod.build_neighbor_table(vectors, cfg, verbose=verbose)
+        nbrs = build_mod.build_neighbor_table(
+            vectors, cfg, verbose=verbose, storage=storage
+        )
         logn = int(math.ceil(math.log2(max(n, 2))))
-        return cls(vectors, attrs, perm, nbrs, cfg.m, logn, cfg)
+        vectors = storage_mod.encode_vectors(vectors, storage)
+        return cls(vectors, attrs, perm, nbrs, cfg.m, logn, cfg,
+                   storage=storage)
+
+    def astype_storage(
+        self, storage: storage_mod.StorageConfig
+    ) -> "RangeGraphIndex":
+        """Re-encode the stored arrays under ``storage`` — no rebuild.
+
+        The graph is unchanged, so neighbor ids are bit-identical across
+        codecs and only vector precision changes (bf16/f16 round once; going
+        back to f32 does not restore already-rounded values)."""
+        return dataclasses.replace(
+            self,
+            vectors=storage_mod.encode_vectors(
+                storage_mod.decode_vectors(self.vectors), storage
+            ),
+            neighbors=storage_mod.encode_neighbors(
+                storage_mod.decode_neighbors(self.neighbors), self.n, storage
+            ),
+            storage=storage,
+        )
 
     @property
     def n(self) -> int:
@@ -82,6 +119,8 @@ class RangeGraphIndex:
 
     @property
     def nbytes(self) -> int:
+        """Real stored footprint — halves under compact storage (the two
+        hot-path tables dominate; ``attrs`` stays f64 for rank fidelity)."""
         return self.vectors.nbytes + self.neighbors.nbytes + self.attrs.nbytes
 
     # -- range mapping -------------------------------------------------------
@@ -136,13 +175,14 @@ class RangeGraphIndex:
         q = np.asarray(queries, np.float32)
         L = np.asarray(L)
         R = np.asarray(R)
+        vecs = storage_mod.decode_vectors(self.vectors)  # numpy edge: f32
         ids = np.full((q.shape[0], k), -1, np.int64)
         dists = np.full((q.shape[0], k), np.inf, np.float32)
         for i in range(q.shape[0]):
             lo, hi = int(L[i]), int(R[i])
             if hi < lo:
                 continue
-            x = self.vectors[lo : hi + 1]
+            x = vecs[lo : hi + 1]
             if metric == "l2":
                 d = ((x - q[i]) ** 2).sum(1)
             else:
@@ -164,6 +204,7 @@ class RangeGraphIndex:
             "m": self.m,
             "logn": self.logn,
             "cfg": dataclasses.asdict(self.build_cfg),
+            "storage": dataclasses.asdict(self.storage),
         }
         raw = msgpack.packb(payload)
         digest = hashlib.sha256(raw).hexdigest()
@@ -180,14 +221,21 @@ class RangeGraphIndex:
         if hashlib.sha256(raw).hexdigest() != outer["sha256"]:
             raise IOError(f"checksum mismatch loading {path}")
         p = msgpack.unpackb(raw)
+        vectors = _unpack_array(p["vectors"])
+        neighbors = _unpack_array(p["neighbors"])
+        st = p.get("storage")
+        if st is None:  # pre-storage files: the stored dtypes ARE the config
+            st = {"vector_dtype": str(vectors.dtype),
+                  "neighbor_dtype": str(neighbors.dtype)}
         return cls(
-            vectors=_unpack_array(p["vectors"]),
+            vectors=vectors,
             attrs=_unpack_array(p["attrs"]),
             perm=_unpack_array(p["perm"]),
-            neighbors=_unpack_array(p["neighbors"]),
+            neighbors=neighbors,
             m=p["m"],
             logn=p["logn"],
             build_cfg=build_mod.BuildConfig(**p["cfg"]),
+            storage=storage_mod.StorageConfig(**st),
         )
 
 

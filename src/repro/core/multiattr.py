@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import search as search_mod
+from repro.core import storage as storage_mod
 from repro.kernels import ops
 from repro.core.index import RangeGraphIndex
 
@@ -36,6 +37,7 @@ def _search_multiattr_jit(
     expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
     edge_impl="auto",
 ):
+    nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
     entries = search_mod.range_entry_ids(L, jnp.minimum(R, n - 1), n)
     ok = (entries >= L[:, None]) & (entries <= R[:, None])
@@ -114,6 +116,7 @@ def brute_force_multiattr(index, attr2, queries, L, R, lo2, hi2, *, k=10):
 
     q = np.asarray(queries, np.float32)
     a2 = np.asarray(attr2)
+    vecs = storage_mod.decode_vectors(index.vectors)  # numpy edge: f32
     B = q.shape[0]
     ids = np.full((B, k), -1, np.int64)
     dists = np.full((B, k), np.inf, np.float32)
@@ -127,7 +130,7 @@ def brute_force_multiattr(index, attr2, queries, L, R, lo2, hi2, *, k=10):
         sel = sel[(a2[sel] >= lo2[i]) & (a2[sel] <= hi2[i])]
         if sel.size == 0:
             continue
-        d = ((index.vectors[sel] - q[i]) ** 2).sum(1)
+        d = ((vecs[sel] - q[i]) ** 2).sum(1)
         kk = min(k, d.shape[0])
         part = np.argpartition(d, kk - 1)[:kk]
         part = part[np.argsort(d[part], kind="stable")]

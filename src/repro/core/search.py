@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitset
+from repro.core import storage as storage_mod
 from repro.kernels import ops
 
 __all__ = [
@@ -313,8 +314,12 @@ def search_improvised(
 ):
     """The paper's query path: beam search on the improvised dedicated graph.
 
-    L, R: int32[B] per-query inclusive rank ranges.
+    L, R: int32[B] per-query inclusive rank ranges. ``vectors``/``nbrs`` may
+    arrive in compact storage dtypes (bf16/f16 vectors, int16 ids): the
+    neighbor table decodes once here, outside the hop loop; vectors stay
+    compact end-to-end (the distance kernels upcast in-register).
     """
+    nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
     expand_width = effective_expand_width(expand_width, ef)
     entries = range_entry_ids(L, jnp.minimum(R, n - 1), n)
@@ -351,6 +356,7 @@ def search_fixed_layer(
     SuperPostfiltering baselines. ``edge_impl`` is accepted for knob
     symmetry; this search's nbr_fn is a plain row gather (no
     improvisation)."""
+    nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
     hi_real = jnp.minimum(seg_hi, n - 1)
     entries = range_entry_ids(seg_lo, hi_real, n)
@@ -395,6 +401,7 @@ def search_filtered(
     ``edge_impl`` is accepted for knob symmetry (layer-0 row gather, no
     improvisation).
     """
+    nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
     mid = jnp.clip((L + R) // 2, 0, n - 1)
     entries = jnp.stack([mid, jnp.zeros_like(mid) + n // 2], axis=1)

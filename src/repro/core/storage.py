@@ -1,0 +1,188 @@
+"""Compact storage: bf16 vector table + narrow neighbor codec.
+
+The index's HBM footprint and per-hop bandwidth are the two largest arrays
+every hop reads — the vector table ``[n, d]`` and the packed elemental-graph
+table ``[n, logn+1, m]`` (DESIGN.md §storage). This module is the ONE place
+their storage dtypes are chosen, encoded, and decoded:
+
+  * **Vectors** store as ``float32`` (default), ``bfloat16`` (the compact
+    default — f32's full exponent range, so no scale bookkeeping), or
+    ``float16`` (for CPU hosts where bf16 arithmetic emulation is slow).
+    Every consumer computes distances in f32: the Pallas kernels upcast
+    in-register after the row DMA (the scratch buffer is ``table.dtype``, so
+    the bandwidth saving survives end-to-end), the jnp contracts upcast in
+    ``kernels/ref.py``, and numpy consumers (``brute_force``) decode through
+    :func:`decode_vectors`.
+  * **Neighbor ids** store as ``int16`` when every id fits (``n <= 32768``)
+    and ``int32`` otherwise (``neighbor_dtype="auto"``). There is ONE
+    sentinel convention: ``-1`` is the absent-edge marker in *every* storage
+    dtype — int16's ``-1`` widens to int32's ``-1``, so decode is a plain
+    ``astype(int32)`` and ids are bit-identical across codecs. (A historical
+    dtype-max sentinel once decoded in ``core/distributed.py`` without any
+    encoder ever producing it; it is retired — :func:`decode_neighbors` is
+    the documented decode for every consumer.)
+
+Decode-at-the-edge: compact arrays flow as far as possible — through
+``RangeGraphIndex`` storage, serialization, ``ShardedRangeIndex`` stacking,
+and into the jit boundary — and widen exactly once per consumer, at the top
+of the jitted searches (``core/search.py``), the sharded serve step
+(``core/distributed.py::rfann_serve_step``) and the kernel dispatch layer
+(``kernels/ops.py::select_edges``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "StorageConfig",
+    "default_config",
+    "np_dtype",
+    "resolve_neighbor_dtype",
+    "encode_vectors",
+    "decode_vectors",
+    "encode_neighbors",
+    "decode_neighbors",
+    "NEIGHBOR_SENTINEL",
+]
+
+# The one absent-edge marker, in every storage dtype.
+NEIGHBOR_SENTINEL = -1
+
+_VECTOR_DTYPES = ("float32", "bfloat16", "float16")
+_NEIGHBOR_DTYPES = ("auto", "int16", "int32")
+
+# numpy resolves "bfloat16" only after ml_dtypes registration (importing
+# jax.numpy above guarantees it); keep an explicit map so unpacking a saved
+# index never depends on registration order.
+_NP_DTYPES = {
+    "float32": np.dtype(np.float32),
+    "bfloat16": np.dtype(jnp.bfloat16),
+    "float16": np.dtype(np.float16),
+    "int16": np.dtype(np.int16),
+    "int32": np.dtype(np.int32),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageConfig:
+    """Storage dtypes for the two hot-path tables.
+
+    vector_dtype:   "float32" | "bfloat16" | "float16" — math stays f32.
+    neighbor_dtype: "auto" | "int16" | "int32" — "auto" picks the narrowest
+      width that holds every id of an ``n``-object index; explicit "int16"
+      raises at encode time when ids don't fit. The default is the full-width
+      f32/int32 baseline; :meth:`compact` opts into the narrow codecs.
+    """
+
+    vector_dtype: str = "float32"
+    neighbor_dtype: str = "int32"
+
+    def __post_init__(self):
+        if self.vector_dtype not in _VECTOR_DTYPES:
+            raise ValueError(
+                f"vector_dtype {self.vector_dtype!r} not in {_VECTOR_DTYPES}"
+            )
+        if self.neighbor_dtype not in _NEIGHBOR_DTYPES:
+            raise ValueError(
+                f"neighbor_dtype {self.neighbor_dtype!r} not in "
+                f"{_NEIGHBOR_DTYPES}"
+            )
+
+    @classmethod
+    def compact(cls, vector_dtype: str = "bfloat16") -> "StorageConfig":
+        """The halved-footprint configuration the benchmarks gate on."""
+        return cls(vector_dtype=vector_dtype, neighbor_dtype="auto")
+
+
+def default_config() -> StorageConfig:
+    """StorageConfig for callers that pass ``storage=None``.
+
+    ``REPRO_STORAGE`` overrides: "compact" (bf16 + auto-narrow ids), "f16"
+    (f16 + auto-narrow ids), "f32"/unset (full precision). This is the hook
+    the CI compact-storage leg uses to force every build through the codec.
+    """
+    env = os.environ.get("REPRO_STORAGE", "").strip().lower()
+    if env in ("", "f32", "float32"):
+        return StorageConfig()
+    if env == "compact":
+        return StorageConfig.compact()
+    if env in ("f16", "float16"):
+        return StorageConfig.compact("float16")
+    raise ValueError(
+        f"REPRO_STORAGE={env!r}: expected 'compact', 'f16' or 'f32'"
+    )
+
+
+def np_dtype(name: str) -> np.dtype:
+    """Resolve a serialized dtype string, including the ml_dtypes names."""
+    if name in _NP_DTYPES:
+        return _NP_DTYPES[name]
+    return np.dtype(name)
+
+
+def resolve_neighbor_dtype(n: int, spec: str = "auto") -> np.dtype:
+    """Narrowest id dtype for an ``n``-object table under ``spec``."""
+    fits16 = n - 1 <= np.iinfo(np.int16).max
+    if spec == "int32":
+        return _NP_DTYPES["int32"]
+    if spec == "int16":
+        if not fits16:
+            raise ValueError(
+                f"neighbor_dtype=int16 cannot hold ids up to {n - 1} "
+                f"(max {np.iinfo(np.int16).max})"
+            )
+        return _NP_DTYPES["int16"]
+    if spec == "auto":
+        return _NP_DTYPES["int16" if fits16 else "int32"]
+    raise ValueError(f"neighbor_dtype {spec!r} not in {_NEIGHBOR_DTYPES}")
+
+
+def encode_vectors(vectors, cfg: StorageConfig) -> np.ndarray:
+    """Vector table -> its storage dtype (host-side, numpy)."""
+    dt = np_dtype(cfg.vector_dtype)
+    vectors = np.asarray(vectors)
+    if vectors.dtype == dt:
+        return vectors
+    return np.ascontiguousarray(vectors.astype(dt))
+
+
+def decode_vectors(vectors) -> np.ndarray:
+    """Vector table -> f32 for numpy consumers (``brute_force`` et al.).
+
+    jnp consumers skip this: kernels/ref upcast in-register so the compact
+    table is what actually crosses HBM.
+    """
+    vectors = np.asarray(vectors)
+    if vectors.dtype == np.float32:
+        return vectors
+    return np.ascontiguousarray(vectors.astype(np.float32))
+
+
+def encode_neighbors(nbrs, n: int, cfg: StorageConfig) -> np.ndarray:
+    """Neighbor table -> the narrowest id dtype. ``-1`` stays ``-1``."""
+    dt = resolve_neighbor_dtype(n, cfg.neighbor_dtype)
+    nbrs = np.asarray(nbrs)
+    if nbrs.size and int(nbrs.max(initial=-1)) >= n:
+        raise ValueError(
+            f"neighbor id {int(nbrs.max())} out of range for n={n}"
+        )
+    if nbrs.dtype == dt:
+        return nbrs
+    return np.ascontiguousarray(nbrs.astype(dt))
+
+
+def decode_neighbors(nbrs):
+    """Neighbor table -> int32 at the consumption edge (numpy OR jnp).
+
+    Because ``-1`` is the sentinel in every storage dtype, decode is a plain
+    widening cast — ids are bit-identical across int16/int32 storage. Safe
+    inside a trace; a no-op (no copy) when the table is already int32.
+    """
+    if nbrs.dtype == np.int32:
+        return nbrs
+    return nbrs.astype(jnp.int32 if isinstance(nbrs, jnp.ndarray)
+                       else np.int32)

@@ -9,8 +9,8 @@ for the pure-XLA reference instead. ``impl`` selection:
                   lowers, since Mosaic cannot lower on the CPU host platform)
   * "auto"      — pallas on TPU else xla; overridable per-op via the
                   ``REPRO_DIST_IMPL`` / ``REPRO_EDGE_IMPL`` /
-                  ``REPRO_PRUNE_IMPL`` env vars, or globally via
-                  ``REPRO_IMPL`` (the CI backend matrix)
+                  ``REPRO_PRUNE_IMPL`` / ``REPRO_FLASH_IMPL`` env vars, or
+                  globally via ``REPRO_IMPL`` (the CI backend matrix)
   * "argsort"   — edge selection only: the historical stable-argsort
                   formulation (``core/edge_select.py``), kept for regression
                   benchmarking
@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import edge_select as _legacy_edge_select
 from repro.core import rng as _legacy_rng
+from repro.core import storage as _storage
 from repro.kernels import distance as _distance
 from repro.kernels import edge_select as _edge_select
 from repro.kernels import flash_attention as _flash
@@ -117,6 +118,9 @@ def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True,
     if impl == "auto":
         impl = default_impl("edge")
     _check_impl("select_edges", impl, {"pallas", "xla", "argsort"})
+    # compact neighbor tables (int16 ids, -1 sentinel) decode here so every
+    # backend sees int32; trace-time no-op for already-wide tables
+    nbrs = _storage.decode_neighbors(nbrs)
     if impl == "xla":
         return _ref.select_edges(
             nbrs, us, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers
@@ -194,7 +198,8 @@ def flash_attention(
     q_offset=0, impl="auto", unroll=1, **block_kw,
 ):
     if impl == "auto":
-        impl = default_impl()
+        impl = default_impl("flash")
+    _check_impl("flash_attention", impl, {"pallas", "xla"})
     if impl == "xla":
         return _ref.attention(
             q, k, v, causal=causal, window=window, softcap=softcap,

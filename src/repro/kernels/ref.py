@@ -121,7 +121,11 @@ def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True):
     L = jnp.broadcast_to(jnp.asarray(L, jnp.int32), us.shape)[:, None]
     R = jnp.broadcast_to(jnp.asarray(R, jnp.int32), us.shape)[:, None]
     us = us[:, None]                                      # [F, 1]
-    flat = nbrs[jnp.maximum(us[:, 0], 0)].reshape(F, K)   # [F, K]
+    # compact (int16) tables widen here: -1 is the sentinel in every storage
+    # dtype, so the cast is the whole decode (see core/storage.py)
+    flat = (
+        nbrs[jnp.maximum(us[:, 0], 0)].reshape(F, K).astype(jnp.int32)
+    )                                                     # [F, K]
 
     lay = jnp.arange(K, dtype=jnp.int32)[None, :] // m    # [1, K]
     valid = edge_scan_valid(

@@ -3,7 +3,9 @@
 Mirrors a production vector-search frontend: requests (vector + value range
 + k) accumulate in a queue; the engine pads them to fixed batch shapes
 (jit-friendly buckets), runs the improvised-graph search, and returns
-per-request results with original ids. Stats track qps / recall probes.
+per-request results with original ids. Stats track qps / recall probes plus
+the served index's real footprint (``index_bytes``) — a compact-storage
+index (``core/storage.py``) serves unchanged, decoding at the search edge.
 """
 from __future__ import annotations
 
@@ -60,7 +62,8 @@ class ServingEngine:
         # retrace. _k_buckets tracks which bucketed k values this engine has
         # sent down; stats["compiles"] is its size (one trace per bucket).
         self._k_buckets: set[int] = set()
-        self.stats = {"served": 0, "batches": 0, "wall_s": 0.0, "compiles": 0}
+        self.stats = {"served": 0, "batches": 0, "wall_s": 0.0, "compiles": 0,
+                      "index_bytes": int(index.nbytes)}
 
     def _bucket_k(self, k_req: int) -> int:
         """``bucket_k`` with this engine's knobs. Clamped to ef: the result

@@ -1,4 +1,6 @@
-"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret),
+plus the dispatch guard: unknown backend tokens must raise instead of
+silently routing through the interpreted Pallas path on CPU."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,7 +8,7 @@ import pytest
 
 import repro.kernels.distance as dist_k
 import repro.kernels.flash_attention as flash_k
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +125,59 @@ def test_flash_attention_bf16():
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         rtol=3e-2, atol=3e-2,
     )
+
+
+def _dispatch_calls():
+    """One tiny call per public op, keyed by name, for the guard tests."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 16, (2, 4)).astype(np.int32))
+    nbrs = jnp.asarray(rng.integers(-1, 16, (16, 5, 4)).astype(np.int32))
+    us = jnp.asarray(np.array([0, 1], np.int32))
+    L = jnp.zeros(2, jnp.int32)
+    R = jnp.full(2, 15, jnp.int32)
+    du = jnp.asarray(rng.standard_normal((2, 6)) ** 2, jnp.float32)
+    cand = jnp.asarray(rng.integers(0, 16, (2, 6)).astype(np.int32))
+    aq, ak, av = (jnp.asarray(rng.standard_normal((1, 2, 8, 4)), jnp.float32)
+                  for _ in range(3))
+    return {
+        "pairwise_dist": lambda impl: ops.pairwise_dist(q, x, impl=impl),
+        "gather_dist": lambda impl: ops.gather_dist(q, x, ids, impl=impl),
+        "select_edges": lambda impl: ops.select_edges(
+            nbrs, us, L, R, logn=4, m_out=4, impl=impl),
+        "prune": lambda impl: ops.prune(cand, du, x, m=4, impl=impl),
+        "flash_attention": lambda impl: ops.flash_attention(
+            aq, ak, av, impl=impl),
+    }
+
+
+@pytest.mark.parametrize("op", ["pairwise_dist", "gather_dist",
+                                "select_edges", "prune", "flash_attention"])
+def test_unknown_impl_token_rejected(op):
+    with pytest.raises(ValueError, match=f"{op}: unknown impl"):
+        _dispatch_calls()[op]("bogus")
+
+
+def test_flash_attention_rejects_foreign_tokens():
+    """The PR-3 regression: a global REPRO_IMPL=legacy (the prune-only
+    token) or "argsort" (edge-only) must error on flash_attention, not
+    silently run the interpreted Pallas kernel on CPU."""
+    calls = _dispatch_calls()
+    for tok in ("legacy", "argsort"):
+        with pytest.raises(ValueError, match="flash_attention: unknown"):
+            calls["flash_attention"](tok)
+
+
+def test_flash_attention_global_env_checked(monkeypatch):
+    calls = _dispatch_calls()
+    monkeypatch.setenv("REPRO_IMPL", "legacy")
+    with pytest.raises(ValueError, match="flash_attention: unknown"):
+        calls["flash_attention"]("auto")
+    # the op-specific var wins over the global, like every other dispatch
+    monkeypatch.setenv("REPRO_FLASH_IMPL", "xla")
+    out = calls["flash_attention"]("auto")
+    assert out.shape == (1, 2, 8, 4)
 
 
 def test_flash_attention_matches_unmasked_softmax_rows():
