@@ -14,9 +14,11 @@ The build-side analog of ``hotpath.py``. Two measurements, emitted to
     only useful as a smoke test). Backends are asserted bit-identical
     before timing; ``parity`` records it for the CI bench-gate.
   * ``build_levels`` — end-to-end ``build_neighbor_table`` per prune
-    backend, recording nodes/sec per level (the ``level_times`` hook), so
-    the whole-build win and its per-level breakdown get the same perf
-    record the hop side has.
+    backend under the production default ``chunk=None`` (the C*d-bytes
+    auto-tuner, ``core/build.py::auto_chunk``), recording nodes/sec AND the
+    auto-chosen chunk per level (the ``level_times`` hook), so the
+    whole-build win, its per-level breakdown, and the tuner's choices get
+    the same perf record the hop side has.
 
 Usage: ``PYTHONPATH=src python benchmarks/buildpath.py [--n 32768]
 [--d 64] [--m 16] [--efc 64] [--iters 8] [--chunks 512,2048,4096]
@@ -105,8 +107,12 @@ def bench_prune_step(n, d, m, efc, brute_threshold, chunks, iters,
     return rows, parity
 
 
-def bench_build_levels(n, d, m, efc, brute_threshold, chunk, fused_impl):
-    """End-to-end build per prune backend with per-level nodes/sec."""
+def bench_build_levels(n, d, m, efc, brute_threshold, fused_impl):
+    """End-to-end build per prune backend with per-level nodes/sec.
+
+    Runs ``chunk=None``: each level's prune chunk comes from the C*d-bytes
+    auto-tuner and lands in the per-level record (``chunk`` /
+    ``chunk_reverse`` keys)."""
     rng = np.random.default_rng(1)
     vectors = rng.standard_normal((n, d)).astype(np.float32)
     out = {}
@@ -114,7 +120,7 @@ def bench_build_levels(n, d, m, efc, brute_threshold, chunk, fused_impl):
     for impl in ("legacy", fused_impl):
         cfg = build_mod.BuildConfig(
             m=m, ef_construction=efc, brute_threshold=brute_threshold,
-            chunk=chunk, prune_impl=impl,
+            prune_impl=impl,
         )
         build_mod.build_neighbor_table(vectors, cfg)  # compile outside timing
         times: list = []
@@ -187,7 +193,7 @@ def main(argv=None):
     if not args.no_e2e:
         e2e, e2e_parity, e2e_speedup = bench_build_levels(
             args.e2e_n, args.d, args.m, args.efc, args.brute_threshold,
-            chunks[0], fused_impl,
+            fused_impl,
         )
         print(
             f"e2e build n={args.e2e_n}: legacy {e2e['legacy']['total_s']:.2f}s"
@@ -207,6 +213,22 @@ def main(argv=None):
             "n": args.n, "d": args.d, "m": args.m, "efc": args.efc,
             "brute_threshold": args.brute_threshold, "chunks": list(chunks),
             "iters": args.iters, "fused_impl": fused_impl,
+        },
+        # the chunk auto-tuner's picks at this run's level shapes (the e2e
+        # build below runs chunk=None, so its level records carry these);
+        # search levels floor at _SEARCH_CHUNK_FLOOR — report what the
+        # build actually uses, not the raw budget math
+        "auto_chunk": {
+            "budget_mb": int(os.environ.get(
+                "REPRO_CHUNK_BUDGET_MB", build_mod._DEFAULT_CHUNK_BUDGET_MB
+            )),
+            "search": build_mod.resolve_chunk(
+                build_mod.BuildConfig(), args.m + args.efc, args.d,
+                floor=build_mod._SEARCH_CHUNK_FLOOR),
+            "brute": build_mod.resolve_chunk(
+                build_mod.BuildConfig(), args.brute_threshold, args.d),
+            "reverse": build_mod.resolve_chunk(
+                build_mod.BuildConfig(), 3 * args.m, args.d),
         },
         "parity": bool(step_parity and e2e_parity),
         "prune_step": step_rows,

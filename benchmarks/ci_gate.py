@@ -9,11 +9,14 @@ against the committed full-shape records (``BENCH_hotpath.json``,
     missing or unparseable (the benchmark crashed), its schema lost a
     required section (a refactor silently dropped a measurement), a
     fused-vs-baseline speedup is non-finite, the build benchmark's
-    backend-parity check reported a divergence, or the compact-storage
+    backend-parity check reported a divergence, the compact-storage
     section regressed — footprint ratio above ``--max-footprint-ratio``
     (default 0.55), |recall@10 delta| above ``--max-recall-delta``
-    (default 0.01), or neighbor-codec ids not bit-identical. Footprint and
-    parity are deterministic, so they hard-fail even on shared runners.
+    (default 0.01), or neighbor-codec ids not bit-identical — or the
+    executor compile gate tripped: any post-warmup compile, or more
+    compiled programs than the declared ``configs x batch_buckets x
+    k_buckets`` grid. All of these are deterministic, so they hard-fail
+    even on shared runners.
   * **timing — soft warn** (exit 0, GitHub warning annotation): a smoke
     fused-vs-baseline ratio regressed more than ``--tolerance`` (default
     25%) relative to the committed record. Smoke shapes are tiny and shared
@@ -47,6 +50,7 @@ GATES = {
     ("BENCH_hotpath.json", "BENCH_hotpath_smoke.json"): [
         ("expansion_step", "speedup"),
         ("edge_select_step", "speedup"),
+        ("serve_latency", "small_batch_speedup"),
     ],
     ("BENCH_build.json", "BENCH_build_smoke.json"): [
         (None, "prune_speedup_best"),
@@ -132,6 +136,43 @@ def _check_storage(smoke, name, args, errors):
             f"{name}: int16/int32 neighbor codecs returned different ids")
 
 
+def _check_serve(smoke, name, errors):
+    """Executor compile-count gate: deterministic, so violations are hard.
+
+    A warmed executor must serve its mixed workload with zero post-warmup
+    compiles, and the total program count can never exceed the declared
+    ``len(configs) * len(batch_buckets) * len(k_buckets)`` grid — if either
+    moves, a refactor broke the compile-cache keying or the bucket math.
+    """
+    sl = smoke.get("serve_latency")
+    if not isinstance(sl, dict):
+        errors.append(f"{name}: serve_latency section missing")
+        return
+    pwc = sl.get("post_warmup_compiles")
+    if not isinstance(pwc, int):
+        errors.append(f"{name}: serve_latency.post_warmup_compiles "
+                      f"= {pwc!r} not an int")
+    elif pwc != 0:
+        errors.append(
+            f"{name}: {pwc} post-warmup compiles (a warmed executor must "
+            "serve its declared grid from cache)")
+    else:
+        print(f"ok: {name} zero post-warmup compiles")
+    compiles, max_programs = sl.get("compiles"), sl.get("max_programs")
+    if not isinstance(compiles, int) or not isinstance(max_programs, int) \
+            or max_programs < 1:
+        errors.append(f"{name}: serve_latency compile accounting missing "
+                      f"(compiles={compiles!r}, max_programs="
+                      f"{max_programs!r})")
+    elif compiles > max_programs:
+        errors.append(
+            f"{name}: {compiles} compiled programs exceed the "
+            f"{max_programs}-program (configs x batch_buckets x k_buckets) "
+            "grid")
+    else:
+        print(f"ok: {name} {compiles} programs <= grid {max_programs}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=0.25,
@@ -159,6 +200,7 @@ def main(argv=None):
             errors.append(f"{smoke_name}: backend parity check failed")
         if smoke_name == "BENCH_hotpath_smoke.json":
             _check_storage(smoke, smoke_name, args, errors)
+            _check_serve(smoke, smoke_name, errors)
         for section, key in keys:
             want = _baseline(committed, section, key, committed_name, errors)
             got = _ratio(smoke, section, key, smoke_name, errors)

@@ -13,9 +13,9 @@ import time
 
 import numpy as np
 
-from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig, recall
+from repro.core import config as config_mod
 from repro.data.pipeline import vector_dataset
-from repro.serve.engine import bucket_k
 
 # CPU-scale stand-ins for the paper's five datasets (Table 1)
 BENCH_DATASETS = {
@@ -77,27 +77,29 @@ def make_workload(index: RangeGraphIndex, kind: str, n_queries=128,
     return Workload(kind, L, R, qv)
 
 
-def make_searcher(index: RangeGraphIndex, *, ef=64, expand_width=4,
-                  dist_impl="auto", edge_impl="auto", skip_layers=True,
-                  k_bucket=DEFAULT_K):
-    """Bind index + engine knobs into the ``search_fn(q, L, R, k)`` shape
-    that ``measure`` consumes.
+def make_searcher(index: RangeGraphIndex, *, config=None, ef=None,
+                  expand_width=None, dist_impl=None, edge_impl=None,
+                  skip_layers=None, k_bucket=None, bucket=True):
+    """Bind index + a ``SearchConfig`` into the ``search_fn(q, L, R, k)``
+    shape that ``measure`` consumes (the loose kwargs are the deprecation
+    shim, resolved onto the config).
 
-    ``k_bucket`` applies the serve-side rounding (the same
-    ``serve.engine.bucket_k`` rule ServingEngine uses): the requested k is
-    rounded up to the next bucket multiple (clamped to ef) before it
-    reaches the jitted search, so mixed-k qps sweeps hit a bounded set of
-    compiled programs instead of one retrace per distinct k; results are
-    sliced back to the caller's k. Pass ``k_bucket=None`` to disable the
-    rounding."""
+    ``bucket`` applies the serve-side k rounding
+    (``SearchConfig.bucket_k`` — the same rule ``ServingEngine`` /
+    ``SearchExecutor`` use): the requested k rounds up to the next
+    ``config.k_bucket`` multiple (clamped to ef) before it reaches the
+    jitted search, so mixed-k qps sweeps hit a bounded set of compiled
+    programs instead of one retrace per distinct k; results are sliced
+    back to the caller's k. Pass ``bucket=False`` to disable."""
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl, skip_layers=skip_layers, k_bucket=k_bucket,
+        _warn_where="make_searcher",
+    )
 
     def search_fn(q, L, R, k):
-        kb = bucket_k(k, k_bucket, ef) if k_bucket else k
-        res = index.search_ranks(
-            q, L, R, k=kb, ef=ef, expand_width=expand_width,
-            dist_impl=dist_impl, edge_impl=edge_impl,
-            skip_layers=skip_layers,
-        )
+        kb = config.bucket_k(k) if bucket else k
+        res = index.search_ranks(q, L, R, k=kb, config=config)
         if kb != k:
             res = res._replace(ids=res.ids[:, :k], dists=res.dists[:, :k])
         return res

@@ -11,7 +11,7 @@ import functools
 import numpy as np
 
 from benchmarks import common
-from repro.core import baselines
+from repro.core import SearchConfig, baselines
 
 EFS = (16, 48, 96)
 WORKLOADS = ("frac_2", "frac_8", "mixed")
@@ -19,7 +19,7 @@ WORKLOADS = ("frac_2", "frac_8", "mixed")
 
 def _methods(index):
     def irange(q, L, R, k, ef):
-        return index.search_ranks(q, L, R, k=k, ef=ef)
+        return index.search_ranks(q, L, R, k=k, config=SearchConfig(ef=ef))
 
     def pre(q, L, R, k, ef):
         return baselines.prefilter(index, q, L, R, k=k)
@@ -36,7 +36,7 @@ def _methods(index):
 
 
 def _wrap(fn, index, q, L, R, k, ef):
-    return fn(index, q, L, R, k=k, ef=ef)
+    return fn(index, q, L, R, k=k, config=SearchConfig(ef=ef))
 
 
 def run(quick=False, n_queries=64):

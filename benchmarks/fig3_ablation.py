@@ -4,7 +4,7 @@ iRangeGraph) vs naive (iRangeGraph-)."""
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import baselines
+from repro.core import SearchConfig, baselines
 
 EFS = (32, 96)
 
@@ -17,21 +17,22 @@ def run(quick=False):
         for ef in EFS[:2] if quick else EFS:
             m = common.measure(
                 lambda q, L, R, k, _ef=ef: index.search_ranks(
-                    q, L, R, k=k, ef=_ef
+                    q, L, R, k=k, config=SearchConfig(ef=_ef)
                 ), wl, index,
             )
             rows.append(("fig3", ds, "iRangeGraph", ef,
                          round(m["qps"], 1), round(m["recall"], 4)))
             m = common.measure(
                 lambda q, L, R, k, _ef=ef: index.search_ranks(
-                    q, L, R, k=k, ef=_ef, skip_layers=False
+                    q, L, R, k=k,
+                    config=SearchConfig(ef=_ef, skip_layers=False)
                 ), wl, index,
             )
             rows.append(("fig3", ds, "iRangeGraph-", ef,
                          round(m["qps"], 1), round(m["recall"], 4)))
             m = common.measure(
                 lambda q, L, R, k, _ef=ef: baselines.basic_search(
-                    index, q, L, R, k=k, ef=_ef
+                    index, q, L, R, k=k, config=SearchConfig(ef=_ef)
                 ), wl, index,
             )
             rows.append(("fig3", ds, "BasicSearch", ef,

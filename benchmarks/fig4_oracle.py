@@ -7,7 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import baselines
+from repro.core import SearchConfig, baselines
 
 EFS = (16, 48, 96)
 
@@ -35,14 +35,15 @@ def run(quick=False):
     for ef in EFS[:2] if quick else EFS:
         m = common.measure(
             lambda q, L, R, k, _ef=ef: index.search_ranks(
-                q, L, R, k=k, ef=_ef
+                q, L, R, k=k, config=SearchConfig(ef=_ef)
             ), wl, index,
         )
         rows.append(("fig4", ds, "iRangeGraph", ef,
                      round(m["qps"], 1), round(m["recall"], 4)))
         m = common.measure(
             lambda q, L, R, k, _ef=ef: baselines.oracle_search(
-                index, q, L, R, k=k, ef=_ef, cache=cache
+                index, q, L, R, k=k, config=SearchConfig(ef=_ef),
+                cache=cache
             ), wl, index,
         )
         rows.append(("fig4", ds, "Oracle", ef,

@@ -8,7 +8,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import multiattr
+from repro.core import SearchConfig, multiattr
 
 EFS = (32, 96)
 
@@ -38,12 +38,13 @@ def run(quick=False):
         for ef in EFS[:2] if quick else EFS:
             multiattr.search_multiattr(  # warmup/compile
                 index, attr2, wl.queries[:8], wl.L[:8], wl.R[:8],
-                lo2[:8], hi2[:8], k=10, ef=ef, mode=mode,
+                lo2[:8], hi2[:8], k=10, mode=mode,
+                config=SearchConfig(ef=ef),
             )
             t0 = time.perf_counter()
             res = multiattr.search_multiattr(
                 index, attr2, wl.queries, wl.L, wl.R, lo2, hi2,
-                k=10, ef=ef, mode=mode,
+                k=10, mode=mode, config=SearchConfig(ef=ef),
             )
             ids = np.asarray(res.ids)
             dt = time.perf_counter() - t0

@@ -24,6 +24,12 @@ Three measurements, emitted to ``artifacts/BENCH_hotpath.json``:
     ratio), qps + recall@10 at both, and a bit-identity probe of the
     neighbor codec. ``ci_gate.py`` hard-fails when the ratio exceeds 0.55
     or the recall delta exceeds 0.01.
+  * ``serve_latency`` — the executor layer (``serve/executor.py``): warmed
+    small-batch flush latency with power-of-two batch buckets vs the
+    historical always-pad-to-max executor, plus a mixed-workload
+    compile-count probe (random k <= ef, random batch sizes, two configs).
+    ``ci_gate.py`` hard-fails any post-warmup compile or a program count
+    above the ``len(configs) * len(batch_buckets) * len(k_buckets)`` grid.
 
 Usage: ``PYTHONPATH=src python benchmarks/hotpath.py [--no-sweep] [--b 64]
 [--n 100000] [--d 128] [--m 16] [--iters 50] [--smoke]``
@@ -48,7 +54,7 @@ import jax.numpy as jnp
 
 from common import DEFAULT_K, artifacts_dir, build_index, carry_smoke_ref, \
     make_searcher, make_workload, measure, time_it, update_smoke_ref
-from repro.core import bitset
+from repro.core import SearchConfig, bitset
 from repro.core import edge_select as edge_select_mod
 from repro.core import storage as storage_mod
 from repro.core.search import _pairdist
@@ -156,7 +162,7 @@ def bench_search_sweep(widths=(1, 2, 4, 8), edge_impls=("argsort", "xla"),
     auto_edge = ops.default_impl("edge")
     rows = []
     for w in widths:
-        fn = make_searcher(index, ef=64, expand_width=w)
+        fn = make_searcher(index, config=SearchConfig(ef=64, expand_width=w))
         r = measure(fn, wl, index, k=DEFAULT_K)
         # label the resolved backend so rows are self-describing
         rows.append({"expand_width": w, "edge_impl": auto_edge,
@@ -164,7 +170,8 @@ def bench_search_sweep(widths=(1, 2, 4, 8), edge_impls=("argsort", "xla"),
     for impl in edge_impls:
         if impl == auto_edge:
             continue  # already measured as the width-4 auto row
-        fn = make_searcher(index, ef=64, expand_width=4, edge_impl=impl)
+        fn = make_searcher(
+            index, config=SearchConfig(ef=64, edge_impl=impl))
         r = measure(fn, wl, index, k=DEFAULT_K)
         rows.append({
             "expand_width": 4, "edge_impl": impl,
@@ -202,7 +209,8 @@ def bench_storage_footprint(dataset="wit-like", n_queries=64):
     for tag, idx in (("f32", idx32), ("compact", idxc)):
         # ground truth always comes from the f32 index: recall_delta must
         # see quantization-induced loss, not a self-consistent compact gt
-        r = measure(make_searcher(idx, ef=64), wl, idx32, k=DEFAULT_K)
+        r = measure(make_searcher(idx, config=SearchConfig(ef=64)), wl,
+                    idx32, k=DEFAULT_K)
         out[tag] = {k: float(v) for k, v in r.items()}
     out["recall_delta"] = out["compact"]["recall"] - out["f32"]["recall"]
     # int16 vs int32 neighbor storage with identical vectors: ids must be
@@ -212,13 +220,81 @@ def bench_storage_footprint(dataset="wit-like", n_queries=64):
     )
     nq = min(16, len(wl.queries))
     a = idx32.search_ranks(wl.queries[:nq], wl.L[:nq], wl.R[:nq],
-                           k=DEFAULT_K, ef=64)
+                           k=DEFAULT_K, config=SearchConfig(ef=64))
     b = idx16.search_ranks(wl.queries[:nq], wl.L[:nq], wl.R[:nq],
-                           k=DEFAULT_K, ef=64)
+                           k=DEFAULT_K, config=SearchConfig(ef=64))
     out["neighbor_codec_ids_identical"] = bool(
         np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
     )
     return out
+
+
+def bench_serve_latency(dataset="ytaudio-like", max_batch=64,
+                        small_batches=(1, 2, 4, 8), iters=20):
+    """Bucketed flushes vs always-pad-to-max on small batches, plus the
+    mixed-workload compile-count probe (the ci_gate hard gate).
+
+    Both executors are warmed, so the timings isolate the padded compute:
+    the pad-to-max side runs every flush at [max_batch] rows, the bucketed
+    side at the next power of two.
+    """
+    from repro.serve.executor import SearchExecutor
+
+    index = build_index(dataset)
+    cfg = SearchConfig(ef=64, k_bucket=DEFAULT_K)
+    bucketed = SearchExecutor(index, cfg, max_batch=max_batch, warmup=False)
+    padmax = SearchExecutor(index, cfg, max_batch=max_batch,
+                            batch_buckets=(max_batch,), warmup=False)
+    # warm only what the sweep serves (k=10 at the touched batch buckets):
+    # the full-grid warmup is the compile probe below
+    small_bbs = sorted({bucketed.batch_bucket(b) for b in small_batches})
+    bucketed.warmup(batch_buckets=small_bbs, k_buckets=(DEFAULT_K,))
+    padmax.warmup(batch_buckets=(max_batch,), k_buckets=(DEFAULT_K,))
+    wl = make_workload(index, "mixed", n_queries=max_batch)
+    rows = []
+    for B in small_batches:
+        q, L, R = wl.queries[:B], wl.L[:B], wl.R[:B]
+        tb = time_it(
+            lambda q=q, L=L, R=R: bucketed.search_ranks(q, L, R, k=DEFAULT_K),
+            iters=iters)
+        tp = time_it(
+            lambda q=q, L=L, R=R: padmax.search_ranks(q, L, R, k=DEFAULT_K),
+            iters=iters)
+        rows.append({
+            "B": int(B), "bucket": int(bucketed.batch_bucket(B)),
+            "bucketed_us": tb * 1e6, "padmax_us": tp * 1e6,
+            "speedup": tp / tb,
+        })
+    # compile-count probe: warmed executor, mixed workload, two configs —
+    # zero post-warmup compiles inside the declared grid (hard-gated).
+    # The probe has its own small grid (ef=32, max_batch=8) so the full
+    # benchmark doesn't pay a 70-program warmup.
+    pcfg = SearchConfig(ef=32, k_bucket=DEFAULT_K)
+    pcfg2 = pcfg.replace(expand_width=2)
+    probe = SearchExecutor(index, pcfg, max_batch=8, warmup=False)
+    warm = probe.warmup(configs=(pcfg, pcfg2))
+    rng = np.random.default_rng(5)
+    for config in (pcfg, pcfg2):
+        for _ in range(16):
+            B = int(rng.integers(1, probe.max_batch + 1))
+            k = int(rng.integers(1, config.ef + 1))
+            probe.search_ranks(wl.queries[:B], wl.L[:B], wl.R[:B], k=k,
+                               config=config)
+    return {
+        "dataset": dataset, "max_batch": int(max_batch),
+        "batch_buckets": list(bucketed.batch_buckets),
+        "k_buckets": list(cfg.k_buckets()),
+        "rows": rows,
+        # the one unit-free ratio the bench-gate tracks: how much the
+        # smallest flush gains from bucketing
+        "small_batch_speedup": rows[0]["speedup"],
+        "warmup_compiles": int(warm),
+        "post_warmup_compiles": int(
+            probe.stats["compiles"] - probe.stats["warmup_compiles"]
+        ),
+        "max_programs": int(probe.program_grid(configs=(pcfg, pcfg2))),
+        "compiles": int(probe.stats["compiles"]),
+    }
 
 
 def main(argv=None):
@@ -270,8 +346,23 @@ def main(argv=None):
 
     if args.smoke:
         storage = bench_storage_footprint("ytaudio-like", n_queries=16)
+        serve = bench_serve_latency(
+            "ytaudio-like", max_batch=16, small_batches=(1, 4), iters=3
+        )
     else:
         storage = bench_storage_footprint("wit-like", n_queries=64)
+        serve = bench_serve_latency("ytaudio-like")
+    for row in serve["rows"]:
+        print(
+            f"serve flush B={row['B']} (bucket {row['bucket']}): "
+            f"bucketed {row['bucketed_us']:.0f}us  "
+            f"pad-to-max {row['padmax_us']:.0f}us  ({row['speedup']:.2f}x)"
+        )
+    print(
+        f"serve compile probe: {serve['compiles']} programs "
+        f"(grid max {serve['max_programs']}, "
+        f"{serve['post_warmup_compiles']} post-warmup)"
+    )
     print(
         f"storage {storage['dataset']}: f32 {storage['f32_bytes']/1e6:.2f}MB"
         f" -> compact {storage['compact_bytes']/1e6:.2f}MB "
@@ -315,6 +406,7 @@ def main(argv=None):
         "expansion_step": step,
         "edge_select_step": edge,
         "storage_footprint": storage,
+        "serve_latency": serve,
         "search_sweep": sweep,
     }
     # smoke numbers are meaningless; never clobber the real perf record
@@ -325,6 +417,8 @@ def main(argv=None):
             refs = {
                 "expansion_step.speedup": step["speedup"],
                 "edge_select_step.speedup": edge["speedup"],
+                "serve_latency.small_batch_speedup":
+                    serve["small_batch_speedup"],
             }
             if update_smoke_ref(committed, refs):
                 print("updated smoke_ref in", committed)

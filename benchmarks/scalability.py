@@ -6,7 +6,7 @@ import time
 import numpy as np
 
 from benchmarks import common
-from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig, recall
 from repro.data.pipeline import vector_dataset
 
 
@@ -22,7 +22,8 @@ def run(quick=False):
         build_s = time.perf_counter() - t0
         wl = common.make_workload(idx, "mixed", n_queries=64)
         m = common.measure(
-            lambda q, L, R, k: idx.search_ranks(q, L, R, k=k, ef=64),
+            lambda q, L, R, k: idx.search_ranks(
+                q, L, R, k=k, config=SearchConfig(ef=64)),
             wl, idx,
         )
         rows.append((

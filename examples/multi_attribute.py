@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig, recall
 from repro.core import multiattr
 from repro.data.pipeline import vector_dataset
 
@@ -33,14 +33,16 @@ def main():
     gt, _ = multiattr.brute_force_multiattr(
         index, attr2, queries, L, R, lo2, hi2, k=10
     )
+    cfg = SearchConfig(ef=96)
     for mode in ("post", "in", "adaptive"):
         multiattr.search_multiattr(  # compile
             index, attr2, queries[:8], L[:8], R[:8], lo2[:8], hi2[:8],
-            k=10, ef=96, mode=mode,
+            k=10, mode=mode, config=cfg,
         )
         t0 = time.perf_counter()
         res = multiattr.search_multiattr(
-            index, attr2, queries, L, R, lo2, hi2, k=10, ef=96, mode=mode
+            index, attr2, queries, L, R, lo2, hi2, k=10, mode=mode,
+            config=cfg,
         )
         dt = time.perf_counter() - t0
         rec = recall(np.asarray(res.ids), gt)

@@ -4,7 +4,7 @@
 """
 import numpy as np
 
-from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig, recall
 from repro.data.pipeline import vector_dataset
 
 
@@ -27,7 +27,7 @@ def main():
     lo = np.quantile(attrs, 0.30)
     hi = np.quantile(attrs, 0.45)
     res = index.search(queries, np.full(100, lo), np.full(100, hi),
-                       k=10, ef=64)
+                       k=10, config=SearchConfig(ef=64))
 
     # 4. verify against the exact answer
     L, R = index.ranks_of(np.full(100, lo), np.full(100, hi))

@@ -1,5 +1,6 @@
 """iRangeGraph core: the paper's contribution as a composable JAX module."""
 from repro.core.build import BuildConfig, build_flat_graph, build_neighbor_table
+from repro.core.config import SearchConfig
 from repro.core.index import RangeGraphIndex, recall
 from repro.core.search import SearchResult, search_improvised
 from repro.core.storage import StorageConfig
@@ -7,6 +8,7 @@ from repro.core.storage import StorageConfig
 __all__ = [
     "BuildConfig",
     "RangeGraphIndex",
+    "SearchConfig",
     "SearchResult",
     "StorageConfig",
     "build_flat_graph",

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build as build_mod
+from repro.core import config as config_mod
 from repro.core import search as search_mod
 from repro.core import segment_tree
 from repro.core import storage as storage_mod
@@ -48,38 +49,41 @@ def prefilter(index: RangeGraphIndex, queries, L, R, *, k=10, **_):
     )
 
 
-def postfilter(
-    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
-    edge_impl="auto",
-):
+def _filtered(index, queries, L, R, mode, k, config, legacy):
+    config = config_mod.merge(config, _warn_where=f"{mode}filter", **legacy)
     return search_mod.search_filtered(
         jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
-        mode="post", ef=ef, k=k, expand_width=expand_width,
-        dist_impl=dist_impl, edge_impl=edge_impl,
+        mode=mode, k=k, config=config,
+    )
+
+
+def postfilter(
+    index: RangeGraphIndex, queries, L, R, *, k=10, config=None, ef=None,
+    expand_width=None, dist_impl=None, edge_impl=None,
+):
+    return _filtered(
+        index, queries, L, R, "post", k, config,
+        dict(ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+             edge_impl=edge_impl),
     )
 
 
 def infilter(
-    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
-    edge_impl="auto",
+    index: RangeGraphIndex, queries, L, R, *, k=10, config=None, ef=None,
+    expand_width=None, dist_impl=None, edge_impl=None,
 ):
-    return search_mod.search_filtered(
-        jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
-        jnp.asarray(queries, jnp.float32),
-        jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
-        mode="in", ef=ef, k=k, expand_width=expand_width,
-        dist_impl=dist_impl, edge_impl=edge_impl,
+    return _filtered(
+        index, queries, L, R, "in", k, config,
+        dict(ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+             edge_impl=edge_impl),
     )
 
 
 def basic_search(
-    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
-    edge_impl="auto",
+    index: RangeGraphIndex, queries, L, R, *, k=10, config=None, ef=None,
+    expand_width=None, dist_impl=None, edge_impl=None,
 ):
     """Per query: search every covering segment's elemental graph, merge.
 
@@ -87,6 +91,10 @@ def basic_search(
     search is a batched ``search_fixed_layer`` call over all queries (a query
     not using a slot gets an empty segment).
     """
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl, _warn_where="basic_search",
+    )
     q = jnp.asarray(queries, jnp.float32)
     B = q.shape[0]
     L = np.asarray(L)
@@ -114,9 +122,8 @@ def basic_search(
             use_lo = jnp.asarray(np.where(sel, lo, 0), jnp.int32)
             use_hi = jnp.asarray(np.where(sel, hi, -1), jnp.int32)
             res = search_mod.search_fixed_layer(
-                vec, nbrs, q, use_lo, use_hi, layer=int(layer), ef=ef, k=k,
-                expand_width=expand_width, dist_impl=dist_impl,
-                edge_impl=edge_impl,
+                vec, nbrs, q, use_lo, use_hi, layer=int(layer), k=k,
+                config=config,
             )
             selj = jnp.asarray(sel)
             ids_s = jnp.where(selj[:, None], res.ids, ids_s)
@@ -135,11 +142,15 @@ def basic_search(
 
 
 def super_postfilter(
-    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
-    edge_impl="auto",
+    index: RangeGraphIndex, queries, L, R, *, k=10, config=None, ef=None,
+    expand_width=None, dist_impl=None, edge_impl=None,
 ):
     """Smallest covering segment + post-filtering (SuperPostfiltering-style)."""
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl, _warn_where="super_postfilter",
+    )
+    ef = config.ef
     q = jnp.asarray(queries, jnp.float32)
     B = q.shape[0]
     L = np.asarray(L)
@@ -169,10 +180,11 @@ def super_postfilter(
         def filt(ids):
             return (ids >= Lj[:, None]) & (ids <= Rj[:, None])
 
-        # nbr_fn sees the flattened [B*W] expansion frontier
-        expand_width = search_mod.effective_expand_width(expand_width, ef)
-        lo_w = search_mod.tile_frontier(use_lo, expand_width)
-        hi_w = search_mod.tile_frontier(use_hi, expand_width)
+        # nbr_fn sees the flattened [B*W] expansion frontier; W must match
+        # what beam_search derives from the same config
+        eff_w = search_mod.effective_expand_width(config.expand_width, ef)
+        lo_w = search_mod.tile_frontier(use_lo, eff_w)
+        hi_w = search_mod.tile_frontier(use_hi, eff_w)
 
         def nbr_fn(u, _layer=int(layer), _lo=lo_w, _hi=hi_w):
             row = nbrs[jnp.maximum(u, 0), _layer, :]
@@ -194,9 +206,8 @@ def super_postfilter(
         )
         entries = jnp.where(okent, entries, -1)
         res = search_mod.beam_search(
-            vec, q, entries, nbr_fn, ef=ef, k=k, result_filter_fn=filt,
-            expand_width=expand_width, dist_impl=dist_impl,
-            edge_impl=edge_impl,
+            vec, q, entries, nbr_fn, k=k, config=config,
+            result_filter_fn=filt,
         )
         selj = jnp.asarray(sel)
         out_ids = jnp.where(selj[:, None], res.ids, out_ids)
@@ -208,7 +219,7 @@ def super_postfilter(
 
 
 def oracle_search(
-    index: RangeGraphIndex, queries, L, R, *, k=10, ef=64,
+    index: RangeGraphIndex, queries, L, R, *, k=10, ef=None, config=None,
     cache: dict | None = None,
 ):
     """Dedicated graph built from scratch per distinct range (§5.2.4).
@@ -216,6 +227,7 @@ def oracle_search(
     ``cache`` maps (L, R) -> flat graph; pass a dict to amortize builds across
     beam-size sweeps as the paper's Fig. 4 experiment does.
     """
+    config = config_mod.merge(config, ef=ef, _warn_where="oracle_search")
     q = np.asarray(queries, np.float32)
     B = q.shape[0]
     L = np.asarray(L)
@@ -244,7 +256,7 @@ def oracle_search(
             sub, jnp.asarray(g), qq,
             jnp.zeros((len(idxs),), jnp.int32),
             jnp.full((len(idxs),), nn - 1, jnp.int32),
-            layer=0, ef=ef, k=k,
+            layer=0, k=k, config=config,
         )
         rids = np.asarray(res.ids)
         out_ids[idxs] = np.where(rids >= 0, rids + lo, -1)

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 
 import jax
@@ -34,9 +35,13 @@ import numpy as np
 
 from repro.core import search as search_mod
 from repro.core import storage as storage_mod
+from repro.core.config import SearchConfig
 from repro.kernels import ops
 
-__all__ = ["BuildConfig", "build_neighbor_table", "build_flat_graph"]
+__all__ = [
+    "BuildConfig", "auto_chunk", "resolve_chunk", "build_neighbor_table",
+    "build_flat_graph",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,8 +52,50 @@ class BuildConfig:
     brute_threshold: int = 128     # segments this small use exact candidates
     add_reverse: bool = True       # bidirectional pass per level
     fill_pruned: bool = True       # keepPrunedConnections
-    chunk: int = 4096              # nodes per batched pruning call
+    chunk: int | None = None       # nodes per batched prune call; None = auto
     prune_impl: str = "auto"       # "auto" | "pallas" | "xla" | "legacy"
+
+
+# The gathered candidate block a chunked prune re-reads once per keep sweep
+# is [chunk, C, d] f32; past cache residency the lazy-column win decays
+# (2.3x -> 1.8x on the dev host, BENCH_build.json chunk sweep), so the
+# auto-tuner sizes the chunk against this budget. REPRO_CHUNK_BUDGET_MB
+# overrides for hosts with different cache hierarchies.
+_DEFAULT_CHUNK_BUDGET_MB = 16
+_CHUNK_MIN, _CHUNK_MAX = 256, 8192
+# Search levels interleave the prune with a batched sibling beam search
+# (one search_fixed_layer call per chunk) whose cost amortizes with batch
+# size, so their chunk never auto-tunes below this floor — the residency
+# budget only governs the prune-only passes (brute levels, reverse pass).
+_SEARCH_CHUNK_FLOOR = 2048
+
+
+def auto_chunk(C: int, d: int, *, budget_bytes: int | None = None) -> int:
+    """Per-level build chunk: the largest power of two keeping the gathered
+    ``[chunk, C, d]`` f32 candidate block inside the cache budget, clamped
+    to [256, 8192]. ``BuildConfig.chunk`` overrides (see resolve_chunk)."""
+    if budget_bytes is None:
+        budget_bytes = int(
+            os.environ.get("REPRO_CHUNK_BUDGET_MB", _DEFAULT_CHUNK_BUDGET_MB)
+        ) << 20
+    per_row = max(int(C) * int(d) * 4, 1)
+    target = max(budget_bytes // per_row, 1)
+    p = 1
+    while p * 2 <= target:
+        p <<= 1
+    return max(_CHUNK_MIN, min(_CHUNK_MAX, p))
+
+
+def resolve_chunk(cfg: BuildConfig, C: int, d: int, *,
+                  floor: int | None = None) -> int:
+    """The chunk a level actually uses: the explicit ``cfg.chunk`` when set,
+    else :func:`auto_chunk` keyed on that level's candidate width ``C``
+    (raised to ``floor`` for passes whose cost amortizes with batch size,
+    e.g. the search levels' sibling beam search)."""
+    if cfg.chunk is not None:
+        return int(cfg.chunk)
+    chunk = auto_chunk(C, d)
+    return max(chunk, floor) if floor else chunk
 
 
 def _level_sizes(n: int) -> tuple[int, int]:
@@ -57,7 +104,8 @@ def _level_sizes(n: int) -> tuple[int, int]:
 
 
 def _reverse_pass(
-    nbrs_lay: np.ndarray, vectors, vec_j, seg_of, cfg: BuildConfig
+    nbrs_lay: np.ndarray, vectors, vec_j, seg_of, cfg: BuildConfig,
+    chunk: int | None = None,
 ):
     """Add reverse edges then re-prune each node's list. numpy + fused prune.
 
@@ -65,8 +113,12 @@ def _reverse_pass(
     (``ops.prune`` gathers candidate vectors from it). seg_of: int32[n]
     segment id of each node at this level (reverse edges only ever connect
     nodes of the same segment, but we keep the check for safety).
+    ``chunk``: nodes per prune call; defaults to the auto-tuned chunk for
+    this pass's candidate width C = 3m.
     """
     n, m = nbrs_lay.shape
+    if chunk is None:
+        chunk = resolve_chunk(cfg, 3 * m, np.asarray(vectors).shape[1])
     # collect reverse candidates: for edge (u, v) add u to v's pool (capped)
     us = np.repeat(np.arange(n, dtype=np.int32), m)
     vs = nbrs_lay.reshape(-1)
@@ -87,8 +139,8 @@ def _reverse_pass(
     cand[vs[keep], m + pos[keep]] = us[keep]
     out = np.empty((n, m), np.int32)
     vecs = np.asarray(vectors)
-    for s in range(0, n, cfg.chunk):
-        e = min(n, s + cfg.chunk)
+    for s in range(0, n, chunk):
+        e = min(n, s + chunk)
         ids = jnp.asarray(cand[s:e])
         cvec = jnp.asarray(vecs[np.maximum(cand[s:e], 0)])
         u_vec = jnp.asarray(vecs[s:e])
@@ -112,8 +164,11 @@ def build_neighbor_table(
 
     ``vectors`` must already be in attribute-rank order (see index.py).
     ``level_times``, if given a list, collects per-level wall-clock dicts
-    (layer, segment size, kind, seconds) — the build-throughput record
-    ``benchmarks/buildpath.py`` emits.
+    (layer, segment size, kind, chunk sizes, seconds) — the
+    build-throughput record ``benchmarks/buildpath.py`` emits. With
+    ``cfg.chunk=None`` each level's prune chunk is auto-tuned per its
+    candidate width (see :func:`auto_chunk`); chunking never changes the
+    built table (chunk-invariance is tested), only throughput.
 
     Construction scratch is int32; with ``storage`` the finished table is
     emitted directly in the compact neighbor codec (int16 when ids fit,
@@ -133,18 +188,27 @@ def build_neighbor_table(
         seg_of = ids_all >> (logn - lay)
         t0 = time.perf_counter()
         if size <= cfg.brute_threshold:
-            edges = _build_brute_level(vec_j, n, lay, logn, size, cfg)
+            chunk = resolve_chunk(cfg, size, d)
+            edges = _build_brute_level(vec_j, n, lay, logn, size, cfg, chunk)
         else:
+            chunk = resolve_chunk(cfg, m + cfg.ef_construction, d,
+                                  floor=_SEARCH_CHUNK_FLOOR)
             edges = _build_search_level(
-                vec_j, nbrs, n, lay, logn, size, cfg
+                vec_j, nbrs, n, lay, logn, size, cfg, chunk
             )
+        rev_chunk = None
         if cfg.add_reverse:
-            edges = _reverse_pass(edges, vectors, vec_j, seg_of, cfg)
+            rev_chunk = resolve_chunk(cfg, 3 * m, d)
+            edges = _reverse_pass(edges, vectors, vec_j, seg_of, cfg,
+                                  rev_chunk)
         nbrs[:, lay, :] = edges
         if level_times is not None:
             level_times.append({
                 "layer": int(lay), "seg_size": int(size),
                 "kind": "brute" if size <= cfg.brute_threshold else "search",
+                "chunk": int(chunk),
+                "chunk_reverse": rev_chunk if rev_chunk is None
+                else int(rev_chunk),
                 "seconds": time.perf_counter() - t0,
             })
         if verbose:
@@ -155,11 +219,11 @@ def build_neighbor_table(
     return nbrs
 
 
-def _build_brute_level(vec_j, n, lay, logn, size, cfg: BuildConfig):
+def _build_brute_level(vec_j, n, lay, logn, size, cfg: BuildConfig, chunk):
     """Exact candidates = whole segment. One batched prune per chunk."""
     m = cfg.m
     out = np.empty((n, m), np.int32)
-    step = max(1, cfg.chunk // max(size, 1)) * size  # chunk on segment bounds
+    step = max(1, chunk // max(size, 1)) * size  # chunk on segment bounds
     for s in range(0, n, step):
         e = min(n, s + step)
         u = jnp.arange(s, e, dtype=jnp.int32)
@@ -180,15 +244,17 @@ def _build_brute_level(vec_j, n, lay, logn, size, cfg: BuildConfig):
     return out
 
 
-def _build_search_level(vec_j, nbrs, n, lay, logn, size, cfg: BuildConfig):
+def _build_search_level(vec_j, nbrs, n, lay, logn, size, cfg: BuildConfig,
+                        chunk):
     """Own-child copy + sibling beam search, then prune. Paper §3.2.2."""
     m, efc = cfg.m, cfg.ef_construction
     child_lay = lay + 1
     nbrs_j = jnp.asarray(nbrs)  # children of this level are already built
     out = np.empty((n, m), np.int32)
     half = size // 2
-    for s in range(0, n, cfg.chunk):
-        e = min(n, s + cfg.chunk)
+    search_cfg = SearchConfig(ef=efc)
+    for s in range(0, n, chunk):
+        e = min(n, s + chunk)
         u = jnp.arange(s, e, dtype=jnp.int32)
         lo = (u >> (logn - lay)) << (logn - lay)
         mid = lo + half - 1
@@ -197,7 +263,7 @@ def _build_search_level(vec_j, nbrs, n, lay, logn, size, cfg: BuildConfig):
         sib_hi = jnp.where(in_left, lo + size - 1, mid)
         res = search_mod.search_fixed_layer(
             vec_j, nbrs_j, vec_j[u], sib_lo, sib_hi,
-            layer=child_lay, ef=efc, k=efc,
+            layer=child_lay, k=efc, config=search_cfg,
         )
         own = nbrs_j[u, child_lay, :]                   # int32[B, m]
         cand = jnp.concatenate([own, res.ids], axis=1)  # [B, m + efc]

@@ -1,0 +1,181 @@
+"""One frozen config for the whole query pipeline.
+
+Every search entry point used to thread the same kwarg pile (``ef``,
+``expand_width``, ``dist_impl``, ``edge_impl``, ``metric``, ...) through
+``beam_search`` -> ``search_*`` -> ``RangeGraphIndex`` -> ``ServingEngine``
+-> distributed/benchmarks. :class:`SearchConfig` collapses that pile into a
+single frozen, hashable value (DESIGN.md §7):
+
+  * **hashable** so it can be a static argument of the jitted searches and a
+    compile-cache key of ``serve/executor.py::SearchExecutor`` — two equal
+    configs share one compiled program;
+  * **k stays per-call**: the requested top-k is a workload property, not a
+    pipeline property. :meth:`SearchConfig.bucket_k` rounds it up to the
+    next ``k_bucket`` multiple (clamped to ``ef``) so mixed-k workloads hit
+    the bounded program set :meth:`SearchConfig.k_buckets` enumerates;
+  * **batch buckets** live here too (:func:`batch_bucket` /
+    :func:`batch_buckets`): power-of-two padded batch shapes, so a
+    5-request flush pads to 8 rows instead of ``max_batch``.
+
+The loose kwargs survive on every public entry point as a thin deprecation
+shim (:func:`merge` resolves them onto a config); they go away one release
+after this layer lands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+__all__ = [
+    "SearchConfig",
+    "DEFAULT_EXPAND_WIDTH",
+    "merge",
+    "batch_bucket",
+    "batch_buckets",
+    "pick_bucket",
+]
+
+DEFAULT_EXPAND_WIDTH = 4
+
+_METRICS = ("l2", "ip")
+_DIST_IMPLS = ("auto", "pallas", "xla")
+_EDGE_IMPLS = ("auto", "pallas", "xla", "argsort")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Frozen query-pipeline knobs (hashable: usable as a jit static arg
+    and as a compile-cache key).
+
+    ef:           dynamic candidate-list size (beam width).
+    k_bucket:     requested k rounds up to the next multiple (clamped to
+                  ``ef``) before reaching the jitted search — the one
+                  rounding rule shared by ``ServingEngine``,
+                  ``SearchExecutor`` and the benchmark harness.
+    expand_width: nodes expanded per query per beam iteration (static; the
+                  engine clamps it to ``ef``).
+    dist_impl:    distance backend ("auto" | "pallas" | "xla").
+    edge_impl:    edge-selection backend (same set plus "argsort").
+    metric:       "l2" | "ip".
+    skip_layers:  Algorithm 1's skip-layer rule (improvised search only).
+    max_iters:    beam iteration cap; None = the engine's ``4*ef + 32``.
+    """
+
+    ef: int = 64
+    k_bucket: int = 10
+    expand_width: int = DEFAULT_EXPAND_WIDTH
+    dist_impl: str = "auto"
+    edge_impl: str = "auto"
+    metric: str = "l2"
+    skip_layers: bool = True
+    max_iters: int | None = None
+
+    def __post_init__(self):
+        if int(self.ef) < 1:
+            raise ValueError(f"ef must be >= 1, got {self.ef}")
+        if int(self.k_bucket) < 1:
+            raise ValueError(f"k_bucket must be >= 1, got {self.k_bucket}")
+        if int(self.expand_width) < 1:
+            raise ValueError(
+                f"expand_width must be >= 1, got {self.expand_width}"
+            )
+        if self.metric not in _METRICS:
+            raise ValueError(f"metric {self.metric!r} not in {_METRICS}")
+        if self.dist_impl not in _DIST_IMPLS:
+            raise ValueError(
+                f"dist_impl {self.dist_impl!r} not in {_DIST_IMPLS}"
+            )
+        if self.edge_impl not in _EDGE_IMPLS:
+            raise ValueError(
+                f"edge_impl {self.edge_impl!r} not in {_EDGE_IMPLS}"
+            )
+        if self.max_iters is not None and int(self.max_iters) < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+
+    def replace(self, **kw) -> "SearchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- k bucketing ---------------------------------------------------------
+    def bucket_k(self, k_req: int) -> int:
+        """Round a requested k up to the next ``k_bucket`` multiple, clamped
+        to ``ef`` (the result list only holds ef candidates), so mixed-k
+        workloads hit a bounded set of compiled programs instead of one
+        retrace per distinct k (k is a static arg of the jitted search)."""
+        k_req = int(k_req)
+        if k_req < 1:
+            raise ValueError(f"k must be >= 1, got {k_req}")
+        return min(self.ef, self.k_bucket * -(-k_req // self.k_bucket))
+
+    def k_buckets(self) -> tuple[int, ...]:
+        """Every k value :meth:`bucket_k` can emit — the k axis of the
+        compile-program grid (``k_bucket`` multiples below ``ef``, plus the
+        ``ef`` clamp bucket)."""
+        out = list(range(self.k_bucket, self.ef, self.k_bucket))
+        out.append(self.ef)
+        return tuple(out)
+
+
+def merge(config: SearchConfig | None, *, _warn_where: str | None = None,
+          **overrides) -> SearchConfig:
+    """Resolve the legacy kwarg shim onto one :class:`SearchConfig`.
+
+    Starts from ``config`` (or defaults when None) and applies every
+    non-None override. With a config given, overrides are per-call
+    refinements; with ``config=None`` they are the deprecated loose-kwarg
+    path — ``_warn_where`` names the entry point for the once-per-process
+    deprecation warning.
+    """
+    kw = {k: v for k, v in overrides.items() if v is not None}
+    if config is None:
+        if kw and _warn_where and _warn_where not in _WARNED:
+            _WARNED.add(_warn_where)
+            warnings.warn(
+                f"{_warn_where}: loose search kwargs {sorted(kw)} are "
+                "deprecated; pass config=SearchConfig(...) instead",
+                DeprecationWarning, stacklevel=3,
+            )
+        return SearchConfig(**kw)
+    return config.replace(**kw) if kw else config
+
+
+_WARNED: set[str] = set()
+
+
+# ---------------------------------------------------------------------------
+# Batch-shape buckets
+# ---------------------------------------------------------------------------
+
+def batch_buckets(max_batch: int) -> tuple[int, ...]:
+    """The padded batch shapes a ``max_batch``-sized executor compiles:
+    powers of two below ``max_batch`` plus ``max_batch`` itself (which need
+    not be a power of two)."""
+    max_batch = int(max_batch)
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    out = []
+    p = 1
+    while p < max_batch:
+        out.append(p)
+        p <<= 1
+    out.append(max_batch)
+    return tuple(out)
+
+
+def pick_bucket(b: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket of an ascending ``buckets`` ladder holding ``b``
+    rows — the ONE bucket-selection rule (``SearchExecutor`` applies it to
+    its own, possibly custom, ladder)."""
+    b = int(b)
+    if b < 1:
+        raise ValueError(f"batch size must be >= 1, got {b}")
+    for bb in buckets:
+        if bb >= b:
+            return bb
+    raise ValueError(f"batch size {b} exceeds max_batch {buckets[-1]}")
+
+
+def batch_bucket(b: int, max_batch: int) -> int:
+    """:func:`pick_bucket` over the default :func:`batch_buckets` ladder —
+    the shape a ``b``-request flush actually pads to (a 5-request flush
+    pays 8-row compute, not ``max_batch``-row)."""
+    return pick_bucket(b, batch_buckets(max_batch))

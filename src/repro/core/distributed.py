@@ -30,8 +30,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import build as build_mod
+from repro.core import config as config_mod
 from repro.core import search as search_mod
 from repro.core import storage as storage_mod
+from repro.core.config import SearchConfig
 from repro.core.index import RangeGraphIndex
 
 __all__ = [
@@ -118,7 +120,8 @@ def build_sharded(
 
 def shard_topk(
     vec, nbr, bnd, q, Lq, Rq, *,
-    logn, m, ef, k, expand_width=4, dist_impl="auto", edge_impl="auto",
+    logn, m, k, config: SearchConfig | None = None, ef=None,
+    expand_width=None, dist_impl=None, edge_impl=None,
 ):
     """One shard's clipped local search -> global-id top-k candidates.
 
@@ -129,9 +132,14 @@ def shard_topk(
 
     vec [n_shard, d] (any storage dtype); nbr [n_shard, layers, m] (any
     neighbor codec); bnd i32[2] the shard's real global rank range; q
-    [B, d]; Lq/Rq i32[B] global rank ranges. Returns (ids, dists) [B, k]
-    with ids global (-1 padded) and dists inf-padded.
+    [B, d]; Lq/Rq i32[B] global rank ranges. Engine knobs come from
+    ``config`` (loose kwargs = deprecation shim). Returns (ids, dists)
+    [B, k] with ids global (-1 padded) and dists inf-padded.
     """
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl, _warn_where="shard_topk",
+    )
     # compact storage: ids widen through the one -1-preserving decode
     # (core/storage.py); vectors stay bf16/f16 down to the kernels
     nbr = storage_mod.decode_neighbors(nbr)
@@ -147,9 +155,7 @@ def shard_topk(
     Ll = jnp.where(empty, 1, Ll)
     Rl = jnp.where(empty, 0, Rl)
     res = search_mod.search_improvised(
-        vec, nbr, q, Ll, Rl,
-        logn=logn, m_out=m, ef=ef, k=k, expand_width=expand_width,
-        dist_impl=dist_impl, edge_impl=edge_impl,
+        vec, nbr, q, Ll, Rl, logn=logn, m_out=m, k=k, config=config,
     )
     ids = jnp.where(
         (res.ids >= 0) & ~empty[:, None], res.ids + lo, -1
@@ -182,13 +188,19 @@ def rfann_serve_step(
     mesh: Mesh,
     logn: int,
     m: int,
-    ef: int,
     k: int,
-    expand_width: int = 4,
-    dist_impl: str = "auto",
-    edge_impl: str = "auto",
+    config: SearchConfig | None = None,
+    ef: int | None = None,
+    expand_width: int | None = None,
+    dist_impl: str | None = None,
+    edge_impl: str | None = None,
 ):
-    """Batched distributed RFANN query under shard_map."""
+    """Batched distributed RFANN query under shard_map. Engine knobs come
+    from ``config`` (loose kwargs = deprecation shim)."""
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl, _warn_where="rfann_serve_step",
+    )
 
     have_pod = "pod" in mesh.shape
     query_spec = P(("pod", "model")) if have_pod else P("model")
@@ -197,8 +209,7 @@ def rfann_serve_step(
         # leading shard dim is mapped over the data axis
         ids, dists = shard_topk(
             vec[0], nbr[0], bnd[0], q, Lq, Rq,
-            logn=logn, m=m, ef=ef, k=k, expand_width=expand_width,
-            dist_impl=dist_impl, edge_impl=edge_impl,
+            logn=logn, m=m, k=k, config=config,
         )
         # merge across the data axis: gather all shards' top-k
         all_ids = jax.lax.all_gather(ids, "data", axis=0)      # [S, B, k]
@@ -218,16 +229,19 @@ def rfann_serve_step(
     return fn(shard_vectors, shard_neighbors, shard_bounds, queries, L, R)
 
 
-def make_serve_jit(mesh: Mesh, *, logn, m, ef, k, expand_width=4,
-                   dist_impl="auto", edge_impl="auto"):
+def make_serve_jit(mesh: Mesh, *, logn, m, k, config=None, ef=None,
+                   expand_width=None, dist_impl=None, edge_impl=None):
     """jit wrapper with shardings bound — what the dry-run lowers."""
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl, _warn_where="make_serve_jit",
+    )
 
     @functools.partial(jax.jit, static_argnums=())
     def step(shard_vectors, shard_neighbors, shard_bounds, queries, L, R):
         return rfann_serve_step(
             shard_vectors, shard_neighbors, shard_bounds, queries, L, R,
-            mesh=mesh, logn=logn, m=m, ef=ef, k=k, expand_width=expand_width,
-            dist_impl=dist_impl, edge_impl=edge_impl,
+            mesh=mesh, logn=logn, m=m, k=k, config=config,
         )
 
     return step

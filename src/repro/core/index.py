@@ -26,6 +26,7 @@ import numpy as np
 from repro import compressio
 
 from repro.core import build as build_mod
+from repro.core import config as config_mod
 from repro.core import search as search_mod
 from repro.core import storage as storage_mod
 
@@ -132,16 +133,22 @@ class RangeGraphIndex:
 
     # -- query ---------------------------------------------------------------
     def search_ranks(
-        self, queries, L, R, *, k=10, ef=64, skip_layers=True, metric="l2",
-        expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
-        edge_impl="auto",
+        self, queries, L, R, *, k=10, config=None, ef=None, skip_layers=None,
+        metric=None, expand_width=None, dist_impl=None, edge_impl=None,
     ) -> search_mod.SearchResult:
         """RFANN in rank space: per-query inclusive rank ranges [L, R].
 
-        expand_width: nodes expanded per query per beam iteration (static);
-        dist_impl: distance backend ("auto" | "pallas" | "xla");
-        edge_impl: edge-selection backend (same set, plus "argsort").
+        config: one frozen ``SearchConfig`` holding every engine knob
+        (``k`` stays per-call); the loose kwargs are the deprecation shim —
+        non-None values override the config. For repeated serving traffic
+        prefer ``serve/executor.py::SearchExecutor`` (compile cache +
+        batch/k buckets + AOT warmup) over calling this in a loop.
         """
+        config = config_mod.merge(
+            config, ef=ef, skip_layers=skip_layers, metric=metric,
+            expand_width=expand_width, dist_impl=dist_impl,
+            edge_impl=edge_impl, _warn_where="RangeGraphIndex.search_ranks",
+        )
         return search_mod.search_improvised(
             jnp.asarray(self.vectors),
             jnp.asarray(self.neighbors),
@@ -150,13 +157,8 @@ class RangeGraphIndex:
             jnp.asarray(R, jnp.int32),
             logn=self.logn,
             m_out=self.m,
-            ef=ef,
             k=k,
-            skip_layers=skip_layers,
-            metric=metric,
-            expand_width=expand_width,
-            dist_impl=dist_impl,
-            edge_impl=edge_impl,
+            config=config,
         )
 
     def search(self, queries, lo_val, hi_val, **kw) -> search_mod.SearchResult:

@@ -18,8 +18,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import config as config_mod
 from repro.core import search as search_mod
 from repro.core import storage as storage_mod
+from repro.core.config import SearchConfig
 from repro.kernels import ops
 from repro.core.index import RangeGraphIndex
 
@@ -27,29 +29,27 @@ __all__ = ["search_multiattr"]
 
 
 @functools.partial(
-    jax.jit,
-    static_argnames=("logn", "m_out", "ef", "k", "mode", "metric",
-                     "max_iters", "expand_width", "dist_impl", "edge_impl"),
+    jax.jit, static_argnames=("logn", "m_out", "k", "mode", "config"),
 )
 def _search_multiattr_jit(
     vectors, nbrs, attr2, queries, L, R, lo2, hi2, rng, *,
-    logn, m_out, ef, k, mode, metric="l2", max_iters=None,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
-    edge_impl="auto",
+    logn, m_out, k, mode, config: SearchConfig,
 ):
     nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
     entries = search_mod.range_entry_ids(L, jnp.minimum(R, n - 1), n)
     ok = (entries >= L[:, None]) & (entries <= R[:, None])
     entries = jnp.where(ok, entries, -1)
-    expand_width = search_mod.effective_expand_width(expand_width, ef)
+    expand_width = search_mod.effective_expand_width(
+        config.expand_width, config.ef
+    )
     Lw = search_mod.tile_frontier(L, expand_width)
     Rw = search_mod.tile_frontier(R, expand_width)
 
     def nbr_fn(u):
         return ops.select_edges(
-            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=True,
-            impl=edge_impl,
+            nbrs, u, Lw, Rw, logn=logn, m_out=m_out,
+            skip_layers=config.skip_layers, impl=config.edge_impl,
         )
 
     def filt(ids):
@@ -69,26 +69,28 @@ def _search_multiattr_jit(
         raise ValueError(f"unknown mode {mode!r}")
 
     return search_mod.beam_search(
-        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
-        max_iters=max_iters, result_filter_fn=filt,
-        visit_prob_fn=visit_prob_fn, rng=rng, expand_width=expand_width,
-        dist_impl=dist_impl, edge_impl=edge_impl,
+        vectors, queries, entries, nbr_fn, k=k, config=config,
+        result_filter_fn=filt, visit_prob_fn=visit_prob_fn, rng=rng,
     )
 
 
 def search_multiattr(
     index: RangeGraphIndex, attr2, queries, L, R, lo2, hi2, *,
-    k=10, ef=64, mode="adaptive", seed=0,
-    expand_width=search_mod.DEFAULT_EXPAND_WIDTH, dist_impl="auto",
-    edge_impl="auto",
+    k=10, mode="adaptive", seed=0, config=None, ef=None,
+    expand_width=None, dist_impl=None, edge_impl=None,
 ):
     """Conjunctive RFANN query.
 
     attr2: second attribute values in RANK-of-A1 order (i.e. aligned with
       ``index.vectors``); lo2/hi2: per-query inclusive value ranges on attr2.
     mode: "post" | "in" | "adaptive" (= iRangeGraph+'s p = exp(-t)).
-    dist_impl / edge_impl: kernel backends (see kernels/ops).
+    config: one frozen ``SearchConfig`` (kernel backends, ef, ...); the
+      loose kwargs are the deprecation shim.
     """
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, dist_impl=dist_impl,
+        edge_impl=edge_impl, _warn_where="search_multiattr",
+    )
     return _search_multiattr_jit(
         jnp.asarray(index.vectors),
         jnp.asarray(index.neighbors),
@@ -101,12 +103,9 @@ def search_multiattr(
         jax.random.PRNGKey(seed),
         logn=index.logn,
         m_out=index.m,
-        ef=ef,
         k=k,
         mode=mode,
-        expand_width=expand_width,
-        dist_impl=dist_impl,
-        edge_impl=edge_impl,
+        config=config,
     )
 
 

@@ -28,6 +28,12 @@ multi-attribute variant. **nbr_fn contract**: it receives the *flattened*
 expansion frontier ``int32[B*W]`` (row ``b*W + w`` is query b's w-th
 expansion, ``-1`` for inactive slots) and must return ``int32[B*W, M]``.
 
+Engine knobs arrive as ONE frozen ``core/config.py::SearchConfig`` (a
+static arg of the jitted searches, so equal configs share one compiled
+program — the contract ``serve/executor.py`` builds its compile cache on).
+The historical loose kwargs (``ef=``, ``expand_width=``, ...) remain as a
+deprecation shim resolved by ``config.merge``; ``k`` stays per-call.
+
 With ``expand_width=1`` the engine is bit-identical (ids and dists) to the
 reference implementation in ``core/search_ref.py``; tests enforce this.
 """
@@ -40,11 +46,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitset
+from repro.core import config as config_mod
 from repro.core import storage as storage_mod
+from repro.core.config import DEFAULT_EXPAND_WIDTH, SearchConfig
 from repro.kernels import ops
 
 __all__ = [
     "SearchResult",
+    "SearchConfig",
     "beam_search",
     "effective_expand_width",
     "search_improvised",
@@ -53,8 +62,6 @@ __all__ = [
 ]
 
 _INF = jnp.float32(jnp.inf)
-
-DEFAULT_EXPAND_WIDTH = 4
 
 
 def effective_expand_width(expand_width: int, ef: int) -> int:
@@ -99,38 +106,50 @@ def beam_search(
     entry_ids: jnp.ndarray,        # int32[B, E] (-1 for unused)
     nbr_fn: Callable,              # int32[B*W] -> int32[B*W, M]
     *,
-    ef: int,
     k: int,
-    expand_width: int = DEFAULT_EXPAND_WIDTH,
+    config: SearchConfig | None = None,
+    ef: int | None = None,
+    expand_width: int | None = None,
     max_iters: int | None = None,
-    metric: str = "l2",
+    metric: str | None = None,
     result_filter_fn: Callable | None = None,
     visit_prob_fn: Callable | None = None,
     rng: jax.Array | None = None,
-    dist_impl: str = "auto",
-    edge_impl: str = "auto",
+    dist_impl: str | None = None,
+    edge_impl: str | None = None,
 ) -> SearchResult:
     """Generic batched beam search. See module docstring.
 
-    expand_width: number of unvisited candidates expanded per query per
-      iteration (static). 1 reproduces the reference engine bit-for-bit.
+    config: the engine knobs as ONE frozen ``SearchConfig``; ``k`` stays
+      per-call. The loose kwargs below are the deprecation shim (resolved
+      onto the config by ``config.merge``; non-None values win).
+    config.expand_width: number of unvisited candidates expanded per query
+      per iteration (static). 1 reproduces the reference engine bit-for-bit.
     result_filter_fn: optional ``ids[B,K] -> bool[B,K]``; when given, the
       navigation list accepts everything but the *result* list only accepts
       ids passing the filter (multi-attribute post-filtering semantics).
     visit_prob_fn: optional ``(ids[B,K], t[B]) -> p[B,K]`` probability of
       visiting an id that fails the result filter (the paper's §4
       generalization; p=1 is post-filtering, p=0 in-filtering). Requires rng.
-    dist_impl: "auto" | "pallas" | "xla" distance backend (see kernels/ops).
-    edge_impl: edge-selection backend, same value set plus "argsort". The
-      generic engine performs no edge selection itself (``nbr_fn`` arrives
-      pre-bound), but the knob lives in the engine signature so every
-      wrapper forwards one uniform backend set; concrete searches bind it
-      into their ``nbr_fn`` via ``ops.select_edges``.
+    config.dist_impl: "auto" | "pallas" | "xla" distance backend (see
+      kernels/ops).
+    config.edge_impl: edge-selection backend, same value set plus "argsort".
+      The generic engine performs no edge selection itself (``nbr_fn``
+      arrives pre-bound), but the knob lives in the config so every wrapper
+      forwards one uniform backend set; concrete searches bind it into
+      their ``nbr_fn`` via ``ops.select_edges``.
     """
-    del edge_impl  # consumed by the concrete searches' nbr_fn closures
+    config = config_mod.merge(
+        config, ef=ef, expand_width=expand_width, max_iters=max_iters,
+        metric=metric, dist_impl=dist_impl, edge_impl=edge_impl,
+    )
+    ef = config.ef
+    metric = config.metric
+    dist_impl = config.dist_impl
     n, d = vectors.shape
     B = queries.shape[0]
-    W = effective_expand_width(expand_width, ef)
+    W = effective_expand_width(config.expand_width, ef)
+    max_iters = config.max_iters
     if max_iters is None:
         max_iters = 4 * ef + 32
 
@@ -302,26 +321,15 @@ def tile_frontier(x, expand_width):
 # Concrete searches
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("logn", "m_out", "ef", "k", "skip_layers", "metric",
-                     "max_iters", "expand_width", "dist_impl", "edge_impl"),
-)
-def search_improvised(
-    vectors, nbrs, queries, L, R, *, logn, m_out, ef, k,
-    skip_layers=True, metric="l2", max_iters=None,
-    expand_width=DEFAULT_EXPAND_WIDTH, dist_impl="auto", edge_impl="auto",
-):
-    """The paper's query path: beam search on the improvised dedicated graph.
-
-    L, R: int32[B] per-query inclusive rank ranges. ``vectors``/``nbrs`` may
-    arrive in compact storage dtypes (bf16/f16 vectors, int16 ids): the
-    neighbor table decodes once here, outside the hop loop; vectors stay
-    compact end-to-end (the distance kernels upcast in-register).
-    """
+@functools.partial(jax.jit, static_argnames=("logn", "m_out", "k", "config"))
+def _search_improvised_jit(vectors, nbrs, queries, L, R, *, logn, m_out, k,
+                           config: SearchConfig):
+    """The jitted improvised-search program: ONE static ``config`` instead
+    of a kwarg pile, so equal configs share a compiled program — the unit
+    ``serve/executor.py`` AOT-compiles and caches."""
     nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
-    expand_width = effective_expand_width(expand_width, ef)
+    expand_width = effective_expand_width(config.expand_width, config.ef)
     entries = range_entry_ids(L, jnp.minimum(R, n - 1), n)
     ok = (entries >= L[:, None]) & (entries <= R[:, None])
     entries = jnp.where(ok, entries, -1)
@@ -330,32 +338,43 @@ def search_improvised(
 
     def nbr_fn(u):
         return ops.select_edges(
-            nbrs, u, Lw, Rw, logn=logn, m_out=m_out, skip_layers=skip_layers,
-            impl=edge_impl,
+            nbrs, u, Lw, Rw, logn=logn, m_out=m_out,
+            skip_layers=config.skip_layers, impl=config.edge_impl,
         )
 
-    return beam_search(
-        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
+    return beam_search(vectors, queries, entries, nbr_fn, k=k, config=config)
+
+
+def search_improvised(
+    vectors, nbrs, queries, L, R, *, logn, m_out, k,
+    config: SearchConfig | None = None, ef=None, skip_layers=None,
+    metric=None, max_iters=None, expand_width=None, dist_impl=None,
+    edge_impl=None,
+):
+    """The paper's query path: beam search on the improvised dedicated graph.
+
+    L, R: int32[B] per-query inclusive rank ranges. ``vectors``/``nbrs`` may
+    arrive in compact storage dtypes (bf16/f16 vectors, int16 ids): the
+    neighbor table decodes once here, outside the hop loop; vectors stay
+    compact end-to-end (the distance kernels upcast in-register).
+
+    Knobs come from ``config`` (one frozen ``SearchConfig``); the loose
+    kwargs are the deprecation shim.
+    """
+    config = config_mod.merge(
+        config, ef=ef, skip_layers=skip_layers, metric=metric,
         max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
-        edge_impl=edge_impl,
+        edge_impl=edge_impl, _warn_where="search_improvised",
+    )
+    return _search_improvised_jit(
+        vectors, nbrs, queries, L, R, logn=logn, m_out=m_out, k=k,
+        config=config,
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("layer", "ef", "k", "metric", "max_iters",
-                     "expand_width", "dist_impl", "edge_impl"),
-)
-def search_fixed_layer(
-    vectors, nbrs, queries, seg_lo, seg_hi, *, layer, ef, k,
-    metric="l2", max_iters=None, expand_width=DEFAULT_EXPAND_WIDTH,
-    dist_impl="auto", edge_impl="auto",
-):
-    """Beam search on one elemental graph (segment ``[seg_lo, seg_hi]`` at
-    ``layer``). Used during construction, and by BasicSearch /
-    SuperPostfiltering baselines. ``edge_impl`` is accepted for knob
-    symmetry; this search's nbr_fn is a plain row gather (no
-    improvisation)."""
+@functools.partial(jax.jit, static_argnames=("layer", "k", "config"))
+def _search_fixed_layer_jit(vectors, nbrs, queries, seg_lo, seg_hi, *,
+                            layer, k, config: SearchConfig):
     nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
     hi_real = jnp.minimum(seg_hi, n - 1)
@@ -368,7 +387,7 @@ def search_fixed_layer(
         & (entries <= hi_real[:, None])
     )
     entries = jnp.where(ok, entries, -1)
-    expand_width = effective_expand_width(expand_width, ef)
+    expand_width = effective_expand_width(config.expand_width, config.ef)
     low = tile_frontier(seg_lo, expand_width)
     hiw = tile_frontier(seg_hi, expand_width)
 
@@ -377,30 +396,33 @@ def search_fixed_layer(
         ok = (row >= 0) & (row >= low[:, None]) & (row <= hiw[:, None])
         return jnp.where(ok & (u >= 0)[:, None], row, -1)
 
-    return beam_search(
-        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
-        max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
-        edge_impl=edge_impl,
+    return beam_search(vectors, queries, entries, nbr_fn, k=k, config=config)
+
+
+def search_fixed_layer(
+    vectors, nbrs, queries, seg_lo, seg_hi, *, layer, k,
+    config: SearchConfig | None = None, ef=None, metric=None, max_iters=None,
+    expand_width=None, dist_impl=None, edge_impl=None,
+):
+    """Beam search on one elemental graph (segment ``[seg_lo, seg_hi]`` at
+    ``layer``). Used during construction, and by BasicSearch /
+    SuperPostfiltering baselines. ``config.edge_impl`` is accepted for knob
+    symmetry; this search's nbr_fn is a plain row gather (no
+    improvisation)."""
+    config = config_mod.merge(
+        config, ef=ef, metric=metric, max_iters=max_iters,
+        expand_width=expand_width, dist_impl=dist_impl, edge_impl=edge_impl,
+        _warn_where="search_fixed_layer",
+    )
+    return _search_fixed_layer_jit(
+        vectors, nbrs, queries, seg_lo, seg_hi, layer=layer, k=k,
+        config=config,
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mode", "ef", "k", "metric", "max_iters",
-                     "expand_width", "dist_impl", "edge_impl"),
-)
-def search_filtered(
-    vectors, nbrs, queries, L, R, *, mode, ef, k, metric="l2",
-    max_iters=None, rng=None, expand_width=DEFAULT_EXPAND_WIDTH,
-    dist_impl="auto", edge_impl="auto",
-):
-    """Post-/In-filtering baselines on the root elemental graph (layer 0).
-
-    mode: "post" visits everything, keeps in-range results;
-          "in"   only traverses in-range neighbors.
-    ``edge_impl`` is accepted for knob symmetry (layer-0 row gather, no
-    improvisation).
-    """
+@functools.partial(jax.jit, static_argnames=("mode", "k", "config"))
+def _search_filtered_jit(vectors, nbrs, queries, L, R, rng, *, mode, k,
+                         config: SearchConfig):
     nbrs = storage_mod.decode_neighbors(nbrs)
     n = vectors.shape[0]
     mid = jnp.clip((L + R) // 2, 0, n - 1)
@@ -409,7 +431,7 @@ def search_filtered(
     def filt(ids):
         return (ids >= L[:, None]) & (ids <= R[:, None])
 
-    expand_width = effective_expand_width(expand_width, ef)
+    expand_width = effective_expand_width(config.expand_width, config.ef)
     Lw = tile_frontier(L, expand_width)
     Rw = tile_frontier(R, expand_width)
 
@@ -421,9 +443,28 @@ def search_filtered(
         return jnp.where(ok, row, -1)
 
     return beam_search(
-        vectors, queries, entries, nbr_fn, ef=ef, k=k, metric=metric,
-        max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
-        edge_impl=edge_impl,
-        result_filter_fn=filt,
-        rng=rng,
+        vectors, queries, entries, nbr_fn, k=k, config=config,
+        result_filter_fn=filt, rng=rng,
+    )
+
+
+def search_filtered(
+    vectors, nbrs, queries, L, R, *, mode, k,
+    config: SearchConfig | None = None, ef=None, metric=None, max_iters=None,
+    rng=None, expand_width=None, dist_impl=None, edge_impl=None,
+):
+    """Post-/In-filtering baselines on the root elemental graph (layer 0).
+
+    mode: "post" visits everything, keeps in-range results;
+          "in"   only traverses in-range neighbors.
+    ``config.edge_impl`` is accepted for knob symmetry (layer-0 row gather,
+    no improvisation).
+    """
+    config = config_mod.merge(
+        config, ef=ef, metric=metric, max_iters=max_iters,
+        expand_width=expand_width, dist_impl=dist_impl, edge_impl=edge_impl,
+        _warn_where="search_filtered",
+    )
+    return _search_filtered_jit(
+        vectors, nbrs, queries, L, R, rng, mode=mode, k=k, config=config,
     )

@@ -363,6 +363,7 @@ def run_paper_system_cell(*, multi_pod: bool, n_per_shard=65536, dim=768,
     import math
 
     from repro.core import distributed as dist_mod
+    from repro.core.config import SearchConfig
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -388,7 +389,8 @@ def run_paper_system_cell(*, multi_pod: bool, n_per_shard=65536, dim=768,
         NamedSharding(mesh, qspec),
         NamedSharding(mesh, qspec),
     )
-    step = dist_mod.make_serve_jit(mesh, logn=logn, m=m, ef=ef, k=k)
+    step = dist_mod.make_serve_jit(
+        mesh, logn=logn, m=m, k=k, config=SearchConfig(ef=ef))
     t0 = time.time()
     lowered = jax.jit(
         lambda *a: step(*a), in_shardings=shards

@@ -1,32 +1,47 @@
-"""RFANN serving engine: request batching over the iRangeGraph index.
+"""RFANN serving engine: request batching over a SearchExecutor.
 
 Mirrors a production vector-search frontend: requests (vector + value range
-+ k) accumulate in a queue; the engine pads them to fixed batch shapes
-(jit-friendly buckets), runs the improvised-graph search, and returns
-per-request results with original ids. Stats track qps / recall probes plus
-the served index's real footprint (``index_bytes``) — a compact-storage
-index (``core/storage.py``) serves unchanged, decoding at the search edge.
++ k) accumulate in a queue; ``flush`` groups them by k bucket (so one
+``k=ef`` straggler stops inflating everyone's top-k), cuts each group into
+``max_batch``-sized batches, and hands them to the executor — which pads to
+power-of-two batch buckets and serves each (config, batch_bucket, k_bucket)
+from its AOT compile cache (``serve/executor.py``). The engine itself is
+only queueing + per-request stats:
+
+  * ``Result.latency_s`` is the request's OWN queue+batch time (submit ->
+    result), not the whole-batch wall time;
+  * ``stats`` exposes latency percentiles (p50/p95/p99 over the last 8192
+    requests — a bounded window, so long-running engines stay O(1) memory
+    and the numbers track *recent* traffic), executor compile accounting,
+    qps, and the served index's real footprint
+    (``index_bytes``) — a compact-storage index (``core/storage.py``)
+    serves unchanged, decoding at the search edge.
+
+Engine knobs arrive as ONE ``SearchConfig``; the historical loose kwargs
+(``ef=``, ``k_bucket=``, ...) remain as a deprecation shim.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Sequence
+from collections import deque
 
 import numpy as np
 
+from repro.core import config as config_mod
+from repro.core.config import SearchConfig
 from repro.core.index import RangeGraphIndex
+from repro.serve.executor import SearchExecutor
 
 __all__ = ["Request", "Result", "ServingEngine", "bucket_k"]
 
 
 def bucket_k(k_req: int, k_bucket: int, ef: int) -> int:
     """Round a requested k up to the next ``k_bucket`` multiple, clamped to
-    ef, so mixed-k workloads hit a bounded set of compiled programs instead
-    of one retrace per distinct k (k is a static arg of the jitted search).
-    The one rounding rule shared by ``ServingEngine`` and the benchmark
-    harness (``benchmarks/common.make_searcher``)."""
-    return min(ef, k_bucket * max(1, -(-k_req // k_bucket)))
+    ef. Thin compatibility wrapper over the one rounding rule,
+    ``core/config.py::SearchConfig.bucket_k`` (shared by ``ServingEngine``,
+    ``SearchExecutor`` and ``benchmarks/common.make_searcher``)."""
+    return SearchConfig(ef=ef, k_bucket=k_bucket).bucket_k(k_req)
 
 
 @dataclasses.dataclass
@@ -41,79 +56,131 @@ class Request:
 class Result:
     ids: np.ndarray         # original object ids
     dists: np.ndarray
-    latency_s: float
+    latency_s: float        # this request's queue + batch time
 
 
 class ServingEngine:
     def __init__(
-        self, index: RangeGraphIndex, *, ef: int = 64, max_batch: int = 64,
-        k_bucket: int = 10, expand_width: int = 4, dist_impl: str = "auto",
-        edge_impl: str = "auto",
+        self, index: RangeGraphIndex, *, config: SearchConfig | None = None,
+        max_batch: int = 64, executor: SearchExecutor | None = None,
+        warmup: bool | None = None, ef: int | None = None,
+        k_bucket: int | None = None, expand_width: int | None = None,
+        dist_impl: str | None = None, edge_impl: str | None = None,
     ):
+        """config: the engine's ``SearchConfig`` (the loose kwargs are the
+        deprecation shim). executor: share a prebuilt ``SearchExecutor``
+        (its config/max_batch win). warmup: AOT-compile the executor's
+        grid now — forwarded to a newly built executor (None = the
+        ``REPRO_SERVE_WARMUP`` env) and, when True, also applied to a
+        prebuilt one."""
+        config = config_mod.merge(
+            config, ef=ef, k_bucket=k_bucket, expand_width=expand_width,
+            dist_impl=dist_impl, edge_impl=edge_impl,
+            _warn_where="ServingEngine",
+        )
         self.index = index
-        self.ef = ef
-        self.max_batch = max_batch
-        self.k_bucket = k_bucket
-        self.expand_width = expand_width
-        self.dist_impl = dist_impl
-        self.edge_impl = edge_impl
-        self._queue: list[Request] = []
-        # k is a static arg of the jitted search: every distinct value is a
-        # retrace. _k_buckets tracks which bucketed k values this engine has
-        # sent down; stats["compiles"] is its size (one trace per bucket).
-        self._k_buckets: set[int] = set()
-        self.stats = {"served": 0, "batches": 0, "wall_s": 0.0, "compiles": 0,
-                      "index_bytes": int(index.nbytes)}
+        if executor is None:
+            executor = SearchExecutor(
+                index, config, max_batch=max_batch, warmup=warmup
+            )
+        elif warmup:
+            executor.warmup()
+        self.executor = executor
+        self.config = self.executor.config
+        self._queue: list[tuple[Request, float]] = []
+        # bounded window: percentiles track recent traffic at O(1) memory
+        self._latencies: deque[float] = deque(maxlen=8192)
+        self._counts = {"served": 0, "batches": 0, "wall_s": 0.0}
 
-    def _bucket_k(self, k_req: int) -> int:
-        """``bucket_k`` with this engine's knobs. Clamped to ef: the result
-        list only holds ef candidates (top_k(k > ef) would crash), and
-        submit() rejects requests asking for more than ef."""
-        return bucket_k(k_req, self.k_bucket, self.ef)
+    # historical attribute surface, now derived from the one config
+    @property
+    def ef(self) -> int:
+        return self.config.ef
+
+    @property
+    def k_bucket(self) -> int:
+        return self.config.k_bucket
+
+    @property
+    def max_batch(self) -> int:
+        return self.executor.max_batch
+
+    @property
+    def _k_buckets(self) -> set[int]:
+        """k buckets this engine has sent down (compat alias)."""
+        return self.executor.seen_k_buckets
+
+    def warmup(self, **kw) -> int:
+        """AOT-compile the executor's program grid (see
+        ``SearchExecutor.warmup``); afterwards any mixed workload inside
+        the grid serves with zero additional compiles."""
+        return self.executor.warmup(**kw)
 
     def submit(self, req: Request):
-        if req.k > self.ef:
+        """Reject invalid k here, at the request boundary — once a request
+        is queued, flush must be able to serve the whole queue."""
+        if req.k < 1:
+            raise ValueError(f"requested k={req.k} must be >= 1")
+        if req.k > self.config.ef:
             raise ValueError(
-                f"requested k={req.k} exceeds the engine's ef={self.ef}; "
-                f"raise ef or lower k"
+                f"requested k={req.k} exceeds the engine's "
+                f"ef={self.config.ef}; raise ef or lower k"
             )
-        self._queue.append(req)
+        self._queue.append((req, time.perf_counter()))
 
     def flush(self) -> list[Result]:
-        out: list[Result] = []
-        while self._queue:
-            batch = self._queue[: self.max_batch]
-            self._queue = self._queue[self.max_batch :]
-            out.extend(self._run_batch(batch))
-        return out
+        """Serve the queue: group by k bucket, batch up to ``max_batch``,
+        pad to the executor's batch buckets. Results return in submission
+        order; each carries its own queue+batch latency."""
+        queue, self._queue = self._queue, []
+        out: list[Result | None] = [None] * len(queue)
+        groups: dict[int, list[int]] = {}
+        for i, (req, _) in enumerate(queue):
+            groups.setdefault(self.config.bucket_k(req.k), []).append(i)
+        for kb, idxs in groups.items():
+            for s in range(0, len(idxs), self.max_batch):
+                self._run_batch(queue, idxs[s : s + self.max_batch], kb, out)
+        return out  # fully populated: every queue index was in one group
 
-    def _run_batch(self, batch: Sequence[Request]) -> list[Result]:
+    def _run_batch(self, queue, idxs, kb, out):
         t0 = time.perf_counter()
-        B = len(batch)
-        pad = self.max_batch - B  # fixed shapes -> one compile per bucket
-        q = np.stack([r.vector for r in batch] + [batch[0].vector] * pad)
-        lo = np.array([r.lo for r in batch] + [batch[0].lo] * pad)
-        hi = np.array([r.hi for r in batch] + [batch[0].hi] * pad)
-        k = self._bucket_k(max(r.k for r in batch))
-        self._k_buckets.add(k)
-        self.stats["compiles"] = len(self._k_buckets)
+        reqs = [queue[i][0] for i in idxs]
+        q = np.stack([r.vector for r in reqs])
+        lo = np.array([r.lo for r in reqs])
+        hi = np.array([r.hi for r in reqs])
         L, R = self.index.ranks_of(lo, hi)
-        res = self.index.search_ranks(
-            q, L, R, k=k, ef=self.ef, expand_width=self.expand_width,
-            dist_impl=self.dist_impl, edge_impl=self.edge_impl,
-        )
+        res = self.executor.search_ranks(q, L, R, k=kb)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         orig = self.index.original_ids(ids)
-        dt = time.perf_counter() - t0
-        self.stats["served"] += B
-        self.stats["batches"] += 1
-        self.stats["wall_s"] += dt
-        return [
-            Result(orig[i, : batch[i].k], dists[i, : batch[i].k], dt)
-            for i in range(B)
-        ]
+        t1 = time.perf_counter()
+        self._counts["served"] += len(reqs)
+        self._counts["batches"] += 1
+        self._counts["wall_s"] += t1 - t0
+        for row, i in enumerate(idxs):
+            req, t_submit = queue[i]
+            lat = t1 - t_submit
+            self._latencies.append(lat)
+            out[i] = Result(orig[row, : req.k], dists[row, : req.k], lat)
+
+    @property
+    def stats(self) -> dict:
+        ex = self.executor.stats
+        lat = np.fromiter(self._latencies, float) if self._latencies else None
+        pct = {
+            f"latency_p{p}": float(np.percentile(lat, p)) if lat is not None
+            else 0.0
+            for p in (50, 95, 99)
+        }
+        return {
+            **self._counts,
+            "compiles": ex["compiles"],
+            "warmup_compiles": ex["warmup_compiles"],
+            "cache_hits": ex["cache_hits"],
+            "index_bytes": ex["index_bytes"],
+            **pct,
+        }
 
     @property
     def qps(self) -> float:
-        return self.stats["served"] / max(self.stats["wall_s"], 1e-9)
+        return self._counts["served"] / max(self._counts["wall_s"], 1e-9)

@@ -1,0 +1,132 @@
+"""SearchConfig + bucket math + build-chunk auto-tuner unit laws."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, SearchConfig
+from repro.core import build as build_mod
+from repro.core import config as config_mod
+
+
+def test_config_hashable_and_static():
+    a = SearchConfig(ef=32, k_bucket=10)
+    b = SearchConfig(ef=32, k_bucket=10)
+    assert a == b and hash(a) == hash(b)
+    assert {a: 1}[b] == 1  # equal configs share one cache slot
+    c = a.replace(expand_width=2)
+    assert c != a and c.ef == 32
+
+
+@pytest.mark.parametrize("field,value", [
+    ("ef", 0), ("k_bucket", 0), ("expand_width", 0), ("metric", "cosine"),
+    ("dist_impl", "argsort"), ("edge_impl", "legacy"), ("max_iters", 0),
+])
+def test_config_validation(field, value):
+    with pytest.raises(ValueError):
+        SearchConfig(**{field: value})
+
+
+def test_bucket_k_rule():
+    cfg = SearchConfig(ef=64, k_bucket=10)
+    assert [cfg.bucket_k(k) for k in (1, 10, 11, 20, 55, 64)] == \
+        [10, 10, 20, 20, 60, 64]
+    assert SearchConfig(ef=16, k_bucket=10).bucket_k(15) == 16  # ef clamp
+    with pytest.raises(ValueError):
+        cfg.bucket_k(0)
+
+
+def test_k_buckets_enumerates_every_reachable_bucket():
+    cfg = SearchConfig(ef=64, k_bucket=10)
+    assert cfg.k_buckets() == (10, 20, 30, 40, 50, 60, 64)
+    assert SearchConfig(ef=32, k_bucket=10).k_buckets() == (10, 20, 30, 32)
+    assert SearchConfig(ef=20, k_bucket=10).k_buckets() == (10, 20)
+    # closure: bucket_k can only ever emit values from k_buckets()
+    for cfg in (SearchConfig(ef=64, k_bucket=10),
+                SearchConfig(ef=48, k_bucket=7)):
+        got = {cfg.bucket_k(k) for k in range(1, cfg.ef + 1)}
+        assert got == set(cfg.k_buckets())
+
+
+def test_batch_buckets_ladder():
+    assert config_mod.batch_buckets(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert config_mod.batch_buckets(48) == (1, 2, 4, 8, 16, 32, 48)
+    assert config_mod.batch_buckets(1) == (1,)
+    assert config_mod.batch_bucket(5, 64) == 8
+    assert config_mod.batch_bucket(33, 48) == 48
+    assert config_mod.batch_bucket(8, 64) == 8
+    with pytest.raises(ValueError):
+        config_mod.batch_bucket(65, 64)
+    with pytest.raises(ValueError):
+        config_mod.batch_bucket(0, 64)
+
+
+def test_merge_shim_semantics():
+    base = SearchConfig(ef=32)
+    # None overrides are no-ops; non-None refine the given config
+    assert config_mod.merge(base, ef=None, metric=None) is base
+    assert config_mod.merge(base, expand_width=2).expand_width == 2
+    # config=None + loose kwargs is the deprecated path
+    got = config_mod.merge(None, ef=48, edge_impl="xla")
+    assert got == SearchConfig(ef=48, edge_impl="xla")
+
+
+def test_merge_warns_once_per_entry_point():
+    import warnings
+
+    where = "test-entry-point-unique"
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        config_mod.merge(None, ef=8, _warn_where=where)
+        config_mod.merge(None, ef=8, _warn_where=where)
+    assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 1
+
+
+# ---------------------------------------------------------------------------
+# build-chunk auto-tuner
+# ---------------------------------------------------------------------------
+
+def test_auto_chunk_budget_math():
+    budget = 16 << 20
+    # chunk * C * d * 4 stays inside the budget (power of two, clamped)
+    for C, d in [(80, 64), (128, 64), (48, 64), (80, 128), (1024, 1024)]:
+        chunk = build_mod.auto_chunk(C, d, budget_bytes=budget)
+        assert chunk & (chunk - 1) == 0 or chunk in (256, 8192)
+        if chunk not in (256, 8192):  # unclamped: tight fit
+            assert chunk * C * d * 4 <= budget < 2 * chunk * C * d * 4
+    # monotone: wider candidate sets get smaller chunks
+    assert build_mod.auto_chunk(48, 64) >= build_mod.auto_chunk(80, 64) >= \
+        build_mod.auto_chunk(128, 128)
+    # clamps
+    assert build_mod.auto_chunk(1, 1, budget_bytes=1 << 30) == 8192
+    assert build_mod.auto_chunk(4096, 4096, budget_bytes=1 << 20) == 256
+
+
+def test_resolve_chunk_override():
+    assert build_mod.resolve_chunk(BuildConfig(chunk=777), 80, 64) == 777
+    auto = build_mod.resolve_chunk(BuildConfig(), 80, 64)
+    assert auto == build_mod.auto_chunk(80, 64)
+
+
+def test_auto_chunk_build_matches_explicit(tmp_path):
+    """cfg.chunk=None (auto) builds the exact same table as any explicit
+    chunk (chunk invariance), and the level_times record carries the
+    chunks actually used."""
+    rng = np.random.default_rng(3)
+    vectors = rng.standard_normal((256, 8)).astype(np.float32)
+    base = dict(m=4, ef_construction=16, brute_threshold=16)
+    times: list = []
+    auto = build_mod.build_neighbor_table(
+        vectors, BuildConfig(**base), level_times=times
+    )
+    explicit = build_mod.build_neighbor_table(
+        vectors, BuildConfig(**base, chunk=64)
+    )
+    np.testing.assert_array_equal(auto, explicit)
+    assert times and all(
+        lt["chunk"] >= 1 and lt["chunk_reverse"] >= 1 for lt in times
+    )
+    # BuildConfig(chunk=None) round-trips through save/load serialization
+    import dataclasses as dc
+    cfg2 = BuildConfig(**dc.asdict(BuildConfig(**base)))
+    assert cfg2.chunk is None

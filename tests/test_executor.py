@@ -1,0 +1,161 @@
+"""SearchExecutor: compile cache, batch/k buckets, AOT warmup, parity.
+
+The acceptance contract of the executor layer:
+
+  * a warmed executor serves a mixed workload (batch sizes 1..max_batch,
+    mixed k) with ZERO post-warmup compiles — exact, because the executor
+    compiles executables itself instead of trusting the jit cache;
+  * results are bit-identical to the pre-refactor kwarg path
+    (``RangeGraphIndex.search_ranks`` with loose kwargs) on the xla and
+    pallas(interpret) backends — padding to batch buckets and k rounding
+    can never leak into real rows.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig
+from repro.serve.executor import SearchExecutor
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(11)
+    n, d = 256, 12
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    cfg = BuildConfig(m=8, ef_construction=32, brute_threshold=32)
+    return RangeGraphIndex.build(vectors, attrs, cfg), rng
+
+
+def _workload(rng, index, B):
+    q = rng.standard_normal((B, index.dim)).astype(np.float32)
+    L = rng.integers(0, index.n // 2, B).astype(np.int32)
+    R = (L + rng.integers(8, index.n // 2, B)).astype(np.int32)
+    return q, L, np.minimum(R, index.n - 1).astype(np.int32)
+
+
+def test_warmup_then_zero_compiles(small_index):
+    """warmup() compiles the full grid; a mixed workload spanning every
+    batch size 1..max_batch and random k <= ef then hits only the cache."""
+    idx, rng = small_index
+    ex = SearchExecutor(idx, SearchConfig(ef=32, k_bucket=10), max_batch=8,
+                        warmup=False)
+    compiled = ex.warmup()
+    assert compiled == ex.program_grid() == \
+        len(ex.batch_buckets) * len(ex.config.k_buckets())
+    assert ex.stats["warmup_compiles"] == compiled
+    for B in list(range(1, 9)) * 2:
+        q, L, R = _workload(rng, idx, B)
+        k = int(rng.integers(1, 33))
+        res = ex.search_ranks(q, L, R, k=k)
+        assert res.ids.shape == (B, k)
+    assert ex.stats["compiles"] == compiled  # zero post-warmup
+    assert ex.stats["cache_hits"] == ex.stats["batches"]
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_bit_identical_to_kwarg_path(small_index, impl):
+    """Executor results == the direct loose-kwarg search_ranks call, per
+    kernel backend (pallas runs interpreted on CPU)."""
+    idx, rng = small_index
+    cfg = SearchConfig(ef=32, k_bucket=10, dist_impl=impl, edge_impl=impl)
+    ex = SearchExecutor(idx, cfg, max_batch=8, warmup=False)
+    for B, k in [(1, 3), (5, 10), (8, 7)]:
+        q, L, R = _workload(rng, idx, B)
+        got = ex.search_ranks(q, L, R, k=k)
+        want = idx.search_ranks(q, L, R, k=cfg.bucket_k(k), ef=32,
+                                dist_impl=impl, edge_impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(got.ids), np.asarray(want.ids)[:, :k]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.dists), np.asarray(want.dists)[:, :k]
+        )
+
+
+def test_padding_parity_exact_bucket(small_index):
+    """B=5 (padded to the 8 bucket) is bit-identical to the same 5 rows
+    inside an exact B=8 call."""
+    idx, rng = small_index
+    ex = SearchExecutor(idx, SearchConfig(ef=32), max_batch=8, warmup=False)
+    q, L, R = _workload(rng, idx, 8)
+    part = ex.search_ranks(q[:5], L[:5], R[:5], k=10)
+    full = ex.search_ranks(q, L, R, k=10)
+    np.testing.assert_array_equal(np.asarray(part.ids),
+                                  np.asarray(full.ids)[:5])
+    np.testing.assert_array_equal(np.asarray(part.dists),
+                                  np.asarray(full.dists)[:5])
+
+
+def test_oversize_batch_splits(small_index):
+    """B > max_batch splits into max_batch chunks and concatenates — same
+    results as one unsplit call at a bigger executor."""
+    idx, rng = small_index
+    q, L, R = _workload(rng, idx, 11)
+    small = SearchExecutor(idx, SearchConfig(ef=32), max_batch=4,
+                           warmup=False)
+    big = SearchExecutor(idx, SearchConfig(ef=32), max_batch=16,
+                         warmup=False)
+    a = small.search_ranks(q, L, R, k=5)
+    b = big.search_ranks(q, L, R, k=5)
+    assert a.ids.shape == (11, 5)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    # 11 = 4 + 4 + 3; the 3-row tail pads to the 4 bucket
+    assert small.stats["batches"] == 3 and small.stats["queries"] == 11
+
+
+def test_pad_to_max_mode(small_index):
+    """batch_buckets=(max_batch,) reproduces the historical always-pad-
+    to-max engine: every batch runs at one shape."""
+    idx, rng = small_index
+    ex = SearchExecutor(idx, SearchConfig(ef=32), max_batch=8,
+                        batch_buckets=(8,), warmup=False)
+    for B in (1, 5, 8):
+        q, L, R = _workload(rng, idx, B)
+        ex.search_ranks(q, L, R, k=10)
+    assert ex.stats["compiles"] == 1
+    with pytest.raises(ValueError, match="end at max_batch"):
+        SearchExecutor(idx, max_batch=8, batch_buckets=(4,))
+
+
+def test_per_call_config_is_own_cache_axis(small_index):
+    """A second config compiles its own programs; re-running either
+    config's workload adds none."""
+    idx, rng = small_index
+    cfg_a = SearchConfig(ef=32, k_bucket=10)
+    cfg_b = cfg_a.replace(expand_width=1)
+    ex = SearchExecutor(idx, cfg_a, max_batch=4, warmup=False)
+    q, L, R = _workload(rng, idx, 4)
+    ex.search_ranks(q, L, R, k=10)
+    ex.search_ranks(q, L, R, k=10, config=cfg_b)
+    assert ex.stats["compiles"] == 2
+    ex.search_ranks(q, L, R, k=10)
+    ex.search_ranks(q, L, R, k=10, config=cfg_b)
+    assert ex.stats["compiles"] == 2
+    assert ex.stats["cache_hits"] == 2
+
+
+def test_k_exceeding_ef_rejected(small_index):
+    idx, rng = small_index
+    ex = SearchExecutor(idx, SearchConfig(ef=16), max_batch=4, warmup=False)
+    q, L, R = _workload(rng, idx, 2)
+    with pytest.raises(ValueError, match="exceeds the config's ef"):
+        ex.search_ranks(q, L, R, k=17)
+
+
+def test_compact_index_serves(small_index):
+    """A compact-storage index flows through the executor unchanged (the
+    decode happens inside the compiled program) with bit-identical ids
+    across neighbor codecs."""
+    from repro.core import storage as storage_mod
+
+    idx, rng = small_index
+    idx16 = idx.astype_storage(
+        storage_mod.StorageConfig(neighbor_dtype="int16")
+    )
+    q, L, R = _workload(rng, idx, 4)
+    a = SearchExecutor(idx, SearchConfig(ef=32), max_batch=4,
+                       warmup=False).search_ranks(q, L, R, k=5)
+    b = SearchExecutor(idx16, SearchConfig(ef=32), max_batch=4,
+                       warmup=False).search_ranks(q, L, R, k=5)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))

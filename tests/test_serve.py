@@ -1,16 +1,30 @@
-"""ServingEngine: batching, k-bucketing, and retrace accounting.
+"""ServingEngine over SearchExecutor: batching, bucketing, compile gates.
 
-``k`` is a static argument of the jitted search, so every distinct value
-the engine forwards is a full retrace. The engine therefore rounds each
-batch's max requested k up to the next ``k_bucket`` multiple; mixed-k
-workloads must hit a bounded set of compiles, tracked by
-``stats["compiles"]``.
+``k`` and the batch shape are static for the jitted search, so every
+distinct (config, batch_bucket, k_bucket) is one compiled program. The
+engine rounds each request's k up to the next ``k_bucket`` multiple and
+groups the flush per k bucket; the executor pads each batch to a
+power-of-two bucket and serves it from an AOT compile cache. Compile
+counts are exact (the executor compiles executables itself), so the tests
+gate them hard:
+
+  * mixed workloads compile at most ``len(k_buckets) * len(batch_buckets)
+    * len(configs)`` programs (the compile-count gate, also enforced in
+    ``benchmarks/ci_gate.py``);
+  * padding parity: a flush of B < bucket requests is bit-identical to the
+    same B requests served inside an exactly-bucket-sized flush;
+  * per-request latency percentiles (p50/p95/p99) come from each request's
+    own queue+batch time, not the whole-batch wall time.
+
+Engines that assert exact compile counts pass ``warmup=False`` so the CI
+executor-warmup leg (``REPRO_SERVE_WARMUP=1``) cannot skew them.
 """
 import numpy as np
 import pytest
 
-from repro.core import BuildConfig, RangeGraphIndex
-from repro.serve.engine import Request, ServingEngine
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig
+from repro.core import config as config_mod
+from repro.serve.engine import Request, ServingEngine, bucket_k
 
 
 @pytest.fixture(scope="module")
@@ -33,33 +47,121 @@ def _requests(rng, index, ks):
 
 
 def test_mixed_k_single_bucket(small_index):
-    """Every k <= k_bucket rounds to one bucket: exactly one trace."""
+    """Every k <= k_bucket rounds to one bucket; 8 requests at max_batch=4
+    flush as two full batches -> exactly one compiled program."""
     idx, rng = small_index
-    eng = ServingEngine(idx, ef=32, max_batch=4, k_bucket=10)
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4, warmup=False)
     for r in _requests(rng, idx, [3, 7, 10, 1, 9, 10, 2, 5]):
         eng.submit(r)
     results = eng.flush()
     assert len(results) == 8
-    assert eng.stats["compiles"] == 1
+    assert eng.stats["compiles"] == 1     # one (config, B=4, k=10) program
     assert eng.stats["served"] == 8
+    assert eng._k_buckets == {10}
 
 
 def test_k_buckets_bound_compiles(small_index):
-    """ks spanning two buckets produce exactly two traces, rounded up."""
+    """ks spanning two k buckets sub-batch per bucket: each bucket's group
+    cuts into a full batch and a remainder, so the program count is
+    exactly len(k_buckets) * len(batch_buckets seen)."""
     idx, rng = small_index
-    eng = ServingEngine(idx, ef=32, max_batch=2, k_bucket=10)
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=2, warmup=False)
     for r in _requests(rng, idx, [3, 7, 12, 15, 20, 9]):
         eng.submit(r)
     eng.flush()
-    # batches [3,7] -> 10, [12,15] -> 20, [20,9] -> 20: two buckets
-    assert eng.stats["compiles"] == 2
+    # groups: k=10 -> [3, 7, 9], k=20 -> [12, 15, 20]; each runs as a
+    # B=2 batch + a B=1 remainder -> 2 k buckets x 2 batch buckets
     assert eng._k_buckets == {10, 20}
+    assert eng.stats["compiles"] == 4
+    assert eng.stats["compiles"] <= (
+        len(eng.config.k_buckets()) * len(eng.executor.batch_buckets)
+    )
+
+
+def test_compile_count_gate(small_index):
+    """The hard gate: a mixed workload (random k <= ef, random batch
+    sizes, two configs) compiles at most len(k_buckets) * len(batch_buckets)
+    * len(configs) programs — the same bound benchmarks/ci_gate.py
+    enforces on the hotpath serve-latency record."""
+    idx, rng = small_index
+    cfg_a = SearchConfig(ef=32, k_bucket=10)
+    cfg_b = SearchConfig(ef=32, k_bucket=10, expand_width=2)
+    eng = ServingEngine(idx, config=cfg_a, max_batch=8, warmup=False)
+    workload = np.random.default_rng(7)
+    for config in (cfg_a, cfg_b):
+        for _ in range(12):
+            B = int(workload.integers(1, eng.max_batch + 1))
+            q = workload.standard_normal((B, idx.dim)).astype(np.float32)
+            L = np.zeros(B, np.int32)
+            R = np.full(B, idx.n - 1, np.int32)
+            k = int(workload.integers(1, config.ef + 1))
+            eng.executor.search_ranks(q, L, R, k=k, config=config)
+    bound = eng.executor.program_grid(configs=(cfg_a, cfg_b))
+    assert bound == (len(cfg_a.k_buckets()) + len(cfg_b.k_buckets())) * \
+        len(eng.executor.batch_buckets)
+    assert eng.stats["compiles"] <= bound
+
+
+def test_zero_post_warmup_compiles(small_index):
+    """A warmed engine serves any in-grid mixed workload without a single
+    additional compile."""
+    idx, rng = small_index
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4, warmup=True)
+    warm = eng.stats["compiles"]
+    assert warm == eng.stats["warmup_compiles"] > 0
+    for r in _requests(rng, idx, [1, 9, 12, 32, 4, 20, 31]):
+        eng.submit(r)
+    results = eng.flush()
+    assert len(results) == 7
+    assert eng.stats["compiles"] == warm  # zero post-warmup compiles
+
+
+def test_warmup_applies_to_prebuilt_executor(small_index):
+    """warmup=True warms a shared executor too, not only a fresh one."""
+    from repro.serve.executor import SearchExecutor
+
+    idx, rng = small_index
+    ex = SearchExecutor(idx, SearchConfig(ef=32, k_bucket=10), max_batch=4,
+                        warmup=False)
+    eng = ServingEngine(idx, executor=ex, warmup=True)
+    assert ex.stats["warmup_compiles"] == ex.stats["compiles"] == \
+        ex.program_grid()
+    for r in _requests(rng, idx, [3, 20]):
+        eng.submit(r)
+    eng.flush()
+    assert eng.stats["compiles"] == eng.stats["warmup_compiles"]
+
+
+def test_padding_parity(small_index):
+    """A flush of B < bucket requests returns bit-identical results to the
+    same B requests served at exactly bucket size: pads can never leak
+    into real rows."""
+    idx, rng = small_index
+    reqs = _requests(rng, idx, [5] * 5)       # B=5 pads to the 8 bucket
+    fillers = _requests(rng, idx, [5] * 3)    # completes an exact bucket
+    cfg = SearchConfig(ef=32, k_bucket=5)
+    eng_pad = ServingEngine(idx, config=cfg, max_batch=8, warmup=False)
+    eng_full = ServingEngine(idx, config=cfg, max_batch=8, warmup=False)
+    for r in reqs:
+        eng_pad.submit(r)
+        eng_full.submit(r)
+    for r in fillers:
+        eng_full.submit(r)
+    got = eng_pad.flush()
+    want = eng_full.flush()[:5]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.ids, w.ids)
+        np.testing.assert_array_equal(g.dists, w.dists)
 
 
 def test_bucket_rounding_preserves_requested_k(small_index):
     """Each result is cut back to the request's own k."""
     idx, rng = small_index
-    eng = ServingEngine(idx, ef=32, max_batch=8, k_bucket=10)
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=8, warmup=False)
     ks = [3, 12, 7]
     for r in _requests(rng, idx, ks):
         eng.submit(r)
@@ -71,7 +173,8 @@ def test_bucket_rounding_preserves_requested_k(small_index):
 
 def test_results_respect_value_range(small_index):
     idx, rng = small_index
-    eng = ServingEngine(idx, ef=32, max_batch=4, k_bucket=5)
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=5),
+                        max_batch=4)
     reqs = _requests(rng, idx, [5] * 6)
     for r in reqs:
         eng.submit(r)
@@ -87,7 +190,8 @@ def test_bucketed_k_clamps_to_ef(small_index):
     """Bucketing must never push the static k past ef (top_k limit), and
     k > ef requests are rejected at submit time."""
     idx, rng = small_index
-    eng = ServingEngine(idx, ef=16, max_batch=4, k_bucket=10)
+    eng = ServingEngine(idx, config=SearchConfig(ef=16, k_bucket=10),
+                        max_batch=4, warmup=False)
     for r in _requests(rng, idx, [15, 11]):  # bucket would be 20 > ef
         eng.submit(r)
     results = eng.flush()
@@ -96,3 +200,39 @@ def test_bucketed_k_clamps_to_ef(small_index):
     with pytest.raises(ValueError, match="exceeds the engine's ef"):
         eng.submit(Request(vector=np.zeros(idx.dim, np.float32),
                            lo=0.0, hi=1.0, k=17))
+    # invalid k is rejected at the request boundary, never from flush —
+    # a bad request must not be able to take the queued ones down with it
+    with pytest.raises(ValueError, match="must be >= 1"):
+        eng.submit(Request(vector=np.zeros(idx.dim, np.float32),
+                           lo=0.0, hi=1.0, k=0))
+
+
+def test_latency_percentiles(small_index):
+    """Result.latency_s is the request's own queue+batch time and stats
+    exposes ordered percentiles over all served requests."""
+    idx, rng = small_index
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4)
+    for r in _requests(rng, idx, [5] * 6):
+        eng.submit(r)
+    results = eng.flush()
+    for r in results:
+        assert r.latency_s > 0.0
+    s = eng.stats
+    assert 0.0 < s["latency_p50"] <= s["latency_p95"] <= s["latency_p99"]
+    assert s["latency_p99"] <= max(r.latency_s for r in results) + 1e-9
+    # the whole-batch wall time is shared; per-request latencies are not
+    assert len({r.latency_s for r in results}) >= 2  # two batches flushed
+
+
+def test_legacy_kwargs_shim(small_index):
+    """The historical loose-kwarg constructor still works (deprecation
+    shim) and lands on the same config."""
+    idx, rng = small_index
+    eng = ServingEngine(idx, ef=32, max_batch=4, k_bucket=10, warmup=False)
+    assert eng.config == SearchConfig(ef=32, k_bucket=10)
+    assert eng.ef == 32 and eng.k_bucket == 10 and eng.max_batch == 4
+    for r in _requests(rng, idx, [3, 7]):
+        eng.submit(r)
+    assert len(eng.flush()) == 2
+    assert bucket_k(13, 10, 64) == 20 == SearchConfig(ef=64).bucket_k(13)
