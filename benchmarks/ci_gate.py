@@ -1,9 +1,10 @@
 """CI bench-gate: keep the committed kernel perf records honest.
 
 Compares the ``--smoke`` runs the CI job just produced
-(``artifacts/BENCH_hotpath_smoke.json``, ``artifacts/BENCH_build_smoke.json``)
-against the committed full-shape records (``BENCH_hotpath.json``,
-``BENCH_build.json``) and gates on two kinds of drift:
+(``artifacts/BENCH_hotpath_smoke.json``, ``artifacts/BENCH_build_smoke.json``,
+``artifacts/BENCH_serve_slo_smoke.json``) against the committed full-shape
+records (``BENCH_hotpath.json``, ``BENCH_build.json``,
+``BENCH_serve_slo.json``) and gates on two kinds of drift:
 
   * **shape / correctness — hard fail** (exit 1): a smoke artifact is
     missing or unparseable (the benchmark crashed), its schema lost a
@@ -15,8 +16,9 @@ against the committed full-shape records (``BENCH_hotpath.json``,
     (default 0.01), or neighbor-codec ids not bit-identical — or the
     executor compile gate tripped: any post-warmup compile, or more
     compiled programs than the declared ``configs x batch_buckets x
-    k_buckets`` grid. All of these are deterministic, so they hard-fail
-    even on shared runners.
+    k_buckets`` grid — or the serving SLO record shows lost requests or
+    post-warmup compiles (``_check_slo``). All of these are deterministic,
+    so they hard-fail even on shared runners.
   * **timing — soft warn** (exit 0, GitHub warning annotation): a smoke
     fused-vs-baseline ratio regressed more than ``--tolerance`` (default
     25%) relative to the committed record. Smoke shapes are tiny and shared
@@ -55,6 +57,8 @@ GATES = {
     ("BENCH_build.json", "BENCH_build_smoke.json"): [
         (None, "prune_speedup_best"),
     ],
+    # serving SLO record: no speedup ratios — gated by _check_slo instead
+    ("BENCH_serve_slo.json", "BENCH_serve_slo_smoke.json"): [],
 }
 
 
@@ -173,6 +177,86 @@ def _check_serve(smoke, name, errors):
         print(f"ok: {name} {compiles} programs <= grid {max_programs}")
 
 
+def _check_slo(smoke, committed, name, args, errors, warnings):
+    """Serving-loop SLO gate over ``serve_slo.py --smoke`` output.
+
+    The exactly-once accounting is deterministic, so it hard-fails: every
+    leg (nominal / overload / chaos) must show ``resolved == offered`` and
+    ``lost == 0`` — a request that never resolved means a stuck future in
+    the async loop — and the executor must report zero post-warmup
+    compiles (the loop's batch formation must stay on the warmed grid even
+    under shedding and injected faults). The nominal leg must actually
+    serve (ok > 0 with a finite p99). Timing-shaped numbers — nominal p99
+    and overload shed rate vs the committed ``smoke_ref`` — only warn
+    (hard under ``--strict``), like the kernel speedup ratios above.
+    """
+    legs = ("nominal", "overload", "chaos")
+    for leg in legs:
+        doc = smoke.get(leg)
+        if not isinstance(doc, dict):
+            errors.append(f"{name}: {leg} leg missing")
+            continue
+        offered, resolved = doc.get("offered"), doc.get("resolved")
+        lost = doc.get("lost")
+        if not isinstance(offered, int) or not isinstance(resolved, int) \
+                or not isinstance(lost, int):
+            errors.append(f"{name}: {leg} outcome accounting missing "
+                          f"(offered={offered!r}, resolved={resolved!r}, "
+                          f"lost={lost!r})")
+        elif lost != 0 or resolved != offered:
+            errors.append(
+                f"{name}: {leg} leg lost requests ({offered} offered, "
+                f"{resolved} resolved) — every submit() must settle with "
+                "exactly one terminal outcome")
+        else:
+            print(f"ok: {name} {leg} resolved {resolved}/{offered}")
+    serve = smoke.get("serve")
+    pwc = serve.get("post_warmup_compiles") if isinstance(serve, dict) \
+        else None
+    if not isinstance(pwc, int):
+        errors.append(f"{name}: serve.post_warmup_compiles = {pwc!r} "
+                      "not an int")
+    elif pwc != 0:
+        errors.append(
+            f"{name}: {pwc} post-warmup compiles (the async loop's batch "
+            "formation left the warmed bucket grid)")
+    else:
+        print(f"ok: {name} zero post-warmup compiles")
+    nominal = smoke.get("nominal")
+    if isinstance(nominal, dict):
+        ok, p99 = nominal.get("ok"), nominal.get("p99_ms")
+        if not isinstance(ok, int) or ok <= 0:
+            errors.append(f"{name}: nominal leg served nothing (ok={ok!r})")
+        elif not isinstance(p99, (int, float)) or not math.isfinite(p99):
+            errors.append(f"{name}: nominal p99_ms = {p99!r} not finite")
+        else:
+            ref = committed.get("smoke_ref") or {}
+            want = ref.get("nominal.p99_ms")
+            if isinstance(want, (int, float)) and math.isfinite(want) \
+                    and want > 0:
+                rel = p99 / want - 1.0
+                line = (f"{name} nominal.p99_ms: smoke {p99:.1f}ms vs "
+                        f"committed {want:.1f}ms ({rel:+.0%})")
+                if rel > args.slo_p99_tolerance:
+                    warnings.append(line)
+                else:
+                    print("ok:", line)
+        shed_ref = (committed.get("smoke_ref") or {}).get(
+            "overload.shed_rate")
+        overload = smoke.get("overload")
+        got_shed = overload.get("shed_rate") if isinstance(overload, dict) \
+            else None
+        if isinstance(shed_ref, (int, float)) \
+                and isinstance(got_shed, (int, float)):
+            delta = got_shed - shed_ref
+            line = (f"{name} overload.shed_rate: smoke {got_shed:.2f} vs "
+                    f"committed {shed_ref:.2f} ({delta:+.2f})")
+            if abs(delta) > args.slo_shed_tolerance:
+                warnings.append(line)
+            else:
+                print("ok:", line)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=0.25,
@@ -185,6 +269,13 @@ def main(argv=None):
     ap.add_argument("--max-recall-delta", type=float, default=0.01,
                     help="max |recall@10 drift| under compact storage "
                          "(hard fail)")
+    ap.add_argument("--slo-p99-tolerance", type=float, default=1.0,
+                    help="max relative nominal-p99 regression vs smoke_ref "
+                         "before warning (latency on shared runners is very "
+                         "noisy, so the default is loose)")
+    ap.add_argument("--slo-shed-tolerance", type=float, default=0.35,
+                    help="max |overload shed-rate drift| vs smoke_ref "
+                         "before warning")
     args = ap.parse_args(argv)
 
     errors: list[str] = []
@@ -201,6 +292,8 @@ def main(argv=None):
         if smoke_name == "BENCH_hotpath_smoke.json":
             _check_storage(smoke, smoke_name, args, errors)
             _check_serve(smoke, smoke_name, errors)
+        if smoke_name == "BENCH_serve_slo_smoke.json":
+            _check_slo(smoke, committed, smoke_name, args, errors, warnings)
         for section, key in keys:
             want = _baseline(committed, section, key, committed_name, errors)
             got = _ratio(smoke, section, key, smoke_name, errors)

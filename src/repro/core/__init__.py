@@ -1,15 +1,17 @@
 """iRangeGraph core: the paper's contribution as a composable JAX module."""
 from repro.core.build import BuildConfig, build_flat_graph, build_neighbor_table
-from repro.core.config import SearchConfig
-from repro.core.index import RangeGraphIndex, recall
+from repro.core.config import SearchConfig, ServeConfig
+from repro.core.index import IndexCorruptionError, RangeGraphIndex, recall
 from repro.core.search import SearchResult, search_improvised
 from repro.core.storage import StorageConfig
 
 __all__ = [
     "BuildConfig",
+    "IndexCorruptionError",
     "RangeGraphIndex",
     "SearchConfig",
     "SearchResult",
+    "ServeConfig",
     "StorageConfig",
     "build_flat_graph",
     "build_neighbor_table",

@@ -18,6 +18,8 @@ import dataclasses
 import hashlib
 import io
 import math
+import warnings
+import zlib
 
 import jax.numpy as jnp
 import msgpack
@@ -30,17 +32,51 @@ from repro.core import config as config_mod
 from repro.core import search as search_mod
 from repro.core import storage as storage_mod
 
-__all__ = ["RangeGraphIndex"]
+__all__ = ["IndexCorruptionError", "RangeGraphIndex"]
+
+
+class IndexCorruptionError(IOError):
+    """A saved index failed an integrity check on load.
+
+    ``field`` names the offending array (``"vectors"``, ``"neighbors"``,
+    ...) or ``"envelope"`` for whole-file damage, so operators see *what*
+    rotted instead of an opaque unpack/reshape error. Subclasses
+    ``IOError`` so historical ``except IOError`` call sites keep working.
+    """
+
+    def __init__(self, field: str, message: str):
+        super().__init__(f"corrupt index [{field}]: {message}")
+        self.field = field
 
 
 def _pack_array(a: np.ndarray) -> dict:
-    return {"dtype": str(a.dtype), "shape": list(a.shape), "data": a.tobytes()}
+    data = a.tobytes()
+    # per-array checksum: the envelope sha256 says "this file rotted",
+    # crc32 here says *which field* — and survives partial/streamed writes
+    return {"dtype": str(a.dtype), "shape": list(a.shape), "data": data,
+            "crc32": zlib.crc32(data)}
 
 
-def _unpack_array(d: dict) -> np.ndarray:
+def _unpack_array(d: dict, field: str) -> np.ndarray:
+    data = d["data"]
+    dtype = storage_mod.np_dtype(d["dtype"])
+    want = int(np.prod(d["shape"], dtype=np.int64)) * dtype.itemsize
+    if len(data) != want:
+        raise IndexCorruptionError(
+            field, f"truncated: {len(data)} bytes, expected {want} "
+            f"for shape {d['shape']} {d['dtype']}"
+        )
+    crc = d.get("crc32")
+    if crc is None:
+        warnings.warn(
+            f"index file predates per-array checksums ({field} unchecked); "
+            "re-save to add them", stacklevel=3,
+        )
+    elif zlib.crc32(data) != crc:
+        raise IndexCorruptionError(field, "checksum mismatch (bit flip?)")
     # frombuffer views the msgpack bytes read-only; copy so a loaded index
     # is equivalent to a built one (in-place consumers must not raise)
-    a = np.frombuffer(d["data"], dtype=storage_mod.np_dtype(d["dtype"]))
+    a = np.frombuffer(data, dtype=dtype)
     return a.reshape(d["shape"]).copy()
 
 
@@ -216,23 +252,44 @@ class RangeGraphIndex:
 
     @classmethod
     def load(cls, path: str) -> "RangeGraphIndex":
+        """Load with integrity checking: whole-file (envelope sha256) and
+        per-array (crc32 + size) — any mismatch raises
+        :class:`IndexCorruptionError` naming the offending field.
+        Pre-checksum files (no per-array crc32) still load, with a
+        warning."""
         with open(path, "rb") as f:
-            blob = compressio.decompress(f.read())
-        outer = msgpack.unpackb(blob)
-        raw = outer["payload"]
-        if hashlib.sha256(raw).hexdigest() != outer["sha256"]:
-            raise IOError(f"checksum mismatch loading {path}")
-        p = msgpack.unpackb(raw)
-        vectors = _unpack_array(p["vectors"])
-        neighbors = _unpack_array(p["neighbors"])
+            blob = f.read()
+        try:
+            blob = compressio.decompress(blob)
+            outer = msgpack.unpackb(blob)
+            raw = outer["payload"]
+            digest = outer["sha256"]
+        except IndexCorruptionError:
+            raise
+        except Exception as e:  # zlib/zstd/msgpack: the file is not ours
+            raise IndexCorruptionError(
+                "envelope", f"unreadable file {path}: {e}"
+            ) from e
+        if hashlib.sha256(raw).hexdigest() != digest:
+            raise IndexCorruptionError(
+                "envelope", f"payload checksum mismatch loading {path}"
+            )
+        try:
+            p = msgpack.unpackb(raw)
+        except Exception as e:
+            raise IndexCorruptionError(
+                "envelope", f"payload unpack failed loading {path}: {e}"
+            ) from e
+        vectors = _unpack_array(p["vectors"], "vectors")
+        neighbors = _unpack_array(p["neighbors"], "neighbors")
         st = p.get("storage")
         if st is None:  # pre-storage files: the stored dtypes ARE the config
             st = {"vector_dtype": str(vectors.dtype),
                   "neighbor_dtype": str(neighbors.dtype)}
         return cls(
             vectors=vectors,
-            attrs=_unpack_array(p["attrs"]),
-            perm=_unpack_array(p["perm"]),
+            attrs=_unpack_array(p["attrs"], "attrs"),
+            perm=_unpack_array(p["perm"], "perm"),
             neighbors=neighbors,
             m=p["m"],
             logn=p["logn"],

@@ -1,0 +1,40 @@
+"""Serving stack: executor (jit state) -> engines (sync queue / async loop).
+
+``SearchExecutor`` owns compiled-program state; ``ServingEngine`` is the
+synchronous caller-driven queue; ``AsyncServingEngine`` is the
+deadline-aware async loop with admission control, backpressure, shedding
+and drain (DESIGN.md §7-§8). ``serve/faults.py`` injects failures into
+either front-end; ``serve/errors.py`` names every terminal outcome.
+"""
+from repro.serve.engine import Request, Result, ServingEngine
+from repro.serve.errors import (
+    DeadlineExceededError,
+    InjectedFaultError,
+    InvalidRequestError,
+    OverloadedError,
+    RejectedError,
+    ServeError,
+    ShedError,
+    ShutdownError,
+)
+from repro.serve.executor import SearchExecutor
+from repro.serve.faults import FaultConfig, FaultInjector
+from repro.serve.loop import AsyncServingEngine
+
+__all__ = [
+    "AsyncServingEngine",
+    "DeadlineExceededError",
+    "FaultConfig",
+    "FaultInjector",
+    "InjectedFaultError",
+    "InvalidRequestError",
+    "OverloadedError",
+    "RejectedError",
+    "Request",
+    "Result",
+    "SearchExecutor",
+    "ServeError",
+    "ServingEngine",
+    "ShedError",
+    "ShutdownError",
+]

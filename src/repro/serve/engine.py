@@ -17,6 +17,23 @@ only queueing + per-request stats:
     (``index_bytes``) — a compact-storage index (``core/storage.py``)
     serves unchanged, decoding at the search edge.
 
+Robustness contract (DESIGN.md §8):
+
+  * ``submit`` validates at the edge — NaN/Inf vectors, wrong
+    dimensionality, ``k <= 0``, ``k > ef``, inverted ranges all raise
+    ``InvalidRequestError`` (a ``ValueError``) BEFORE queueing, so one bad
+    request can never poison a batch;
+  * ``flush`` isolates batch failures: an exception while running one
+    batch fails only that batch's requests (their slots in the returned
+    list hold the exception instance) and the engine stays serviceable;
+  * ``close(drain=...)`` never silently drops pending requests — they are
+    served (drain) or failed fast with ``ShutdownError``.
+
+The flush-formation logic (:func:`plan_flush`) and the batch runner
+(:func:`run_search_batch`, with the fault-injection hooks of
+``serve/faults.py``) are module functions shared with the async serving
+loop (``serve/loop.py``), so the two front-ends cannot drift.
+
 Engine knobs arrive as ONE ``SearchConfig``; the historical loose kwargs
 (``ef=``, ``k_bucket=``, ...) remain as a deprecation shim.
 """
@@ -31,9 +48,19 @@ import numpy as np
 from repro.core import config as config_mod
 from repro.core.config import SearchConfig
 from repro.core.index import RangeGraphIndex
+from repro.serve import faults as faults_mod
+from repro.serve.errors import InvalidRequestError, ShutdownError
 from repro.serve.executor import SearchExecutor
 
-__all__ = ["Request", "Result", "ServingEngine", "bucket_k"]
+__all__ = [
+    "Request",
+    "Result",
+    "ServingEngine",
+    "bucket_k",
+    "plan_flush",
+    "run_search_batch",
+    "validate_request",
+]
 
 
 def bucket_k(k_req: int, k_bucket: int, ef: int) -> int:
@@ -59,11 +86,79 @@ class Result:
     latency_s: float        # this request's queue + batch time
 
 
+def validate_request(req: Request, *, dim: int, ef: int):
+    """Edge validation (shared by the sync engine and the async loop).
+
+    Raises :class:`InvalidRequestError` (a ``ValueError``) so a malformed
+    request fails its own submit instead of poisoning a whole batch. Open
+    ranges (``lo=-inf`` / ``hi=+inf``) are legal; NaN bounds and inverted
+    ranges are not.
+    """
+    k = int(req.k)
+    if k < 1:
+        raise InvalidRequestError(f"requested k={req.k} must be >= 1")
+    if k > ef:
+        raise InvalidRequestError(
+            f"requested k={req.k} exceeds the engine's ef={ef}; "
+            f"raise ef or lower k"
+        )
+    v = np.asarray(req.vector)
+    if v.ndim != 1 or v.shape[0] != dim:
+        raise InvalidRequestError(
+            f"query vector shape {v.shape} does not match index dim ({dim},)"
+        )
+    if not np.isfinite(v).all():
+        raise InvalidRequestError("query vector contains NaN/Inf")
+    lo, hi = float(req.lo), float(req.hi)
+    if np.isnan(lo) or np.isnan(hi):
+        raise InvalidRequestError("range bounds must not be NaN")
+    if lo > hi:
+        raise InvalidRequestError(f"inverted range: lo={lo} > hi={hi}")
+
+
+def plan_flush(
+    reqs, config: SearchConfig, max_batch: int
+) -> list[tuple[int, list[int]]]:
+    """Form batches from queued requests: group indices by k bucket, cut
+    each group into ``max_batch`` chunks. Returns ``[(k_bucket, indices)]``
+    covering every input index exactly once — the ONE batch-formation rule
+    shared by ``ServingEngine.flush`` and the async loop."""
+    groups: dict[int, list[int]] = {}
+    for i, req in enumerate(reqs):
+        groups.setdefault(config.bucket_k(req.k), []).append(i)
+    out = []
+    for kb, idxs in groups.items():
+        for s in range(0, len(idxs), max_batch):
+            out.append((kb, idxs[s : s + max_batch]))
+    return out
+
+
+def run_search_batch(index, executor, reqs, kb, *, config=None, faults=None):
+    """Run one formed batch through the executor: value->rank mapping,
+    bucketed compile-cached search, original-id mapping. Returns
+    ``(orig_ids [B, kb], dists [B, kb])``.
+
+    The fault-injection hooks fire here — ``latency`` right before the
+    executor call (an executor latency spike), ``flush_error`` before any
+    compute is spent — so both front-ends inject at the same point."""
+    if faults is not None:
+        faults.maybe_latency()
+        faults.maybe_flush_error()
+    q = np.stack([np.asarray(r.vector, np.float32) for r in reqs])
+    lo = np.array([r.lo for r in reqs])
+    hi = np.array([r.hi for r in reqs])
+    L, R = index.ranks_of(lo, hi)
+    res = executor.search_ranks(q, L, R, k=kb, config=config)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    return index.original_ids(ids), dists
+
+
 class ServingEngine:
     def __init__(
         self, index: RangeGraphIndex, *, config: SearchConfig | None = None,
         max_batch: int = 64, executor: SearchExecutor | None = None,
-        warmup: bool | None = None, ef: int | None = None,
+        warmup: bool | None = None, faults=False, ef: int | None = None,
         k_bucket: int | None = None, expand_width: int | None = None,
         dist_impl: str | None = None, edge_impl: str | None = None,
     ):
@@ -72,13 +167,17 @@ class ServingEngine:
         (its config/max_batch win). warmup: AOT-compile the executor's
         grid now — forwarded to a newly built executor (None = the
         ``REPRO_SERVE_WARMUP`` env) and, when True, also applied to a
-        prebuilt one."""
+        prebuilt one. faults: a ``FaultConfig``/``FaultInjector`` to inject
+        failures into flushes (chaos tests); the sync engine never picks
+        faults up from the env — only the async loop does (see
+        ``serve/faults.py``)."""
         config = config_mod.merge(
             config, ef=ef, k_bucket=k_bucket, expand_width=expand_width,
             dist_impl=dist_impl, edge_impl=edge_impl,
             _warn_where="ServingEngine",
         )
         self.index = index
+        self._owns_executor = executor is None
         if executor is None:
             executor = SearchExecutor(
                 index, config, max_batch=max_batch, warmup=warmup
@@ -87,10 +186,15 @@ class ServingEngine:
             executor.warmup()
         self.executor = executor
         self.config = self.executor.config
+        self.faults = faults_mod.resolve(faults) if faults else None
+        self.closed = False
         self._queue: list[tuple[Request, float]] = []
         # bounded window: percentiles track recent traffic at O(1) memory
         self._latencies: deque[float] = deque(maxlen=8192)
-        self._counts = {"served": 0, "batches": 0, "wall_s": 0.0}
+        self._counts = {
+            "served": 0, "batches": 0, "wall_s": 0.0,
+            "failed": 0, "flush_failures": 0,
+        }
 
     # historical attribute surface, now derived from the one config
     @property
@@ -117,42 +221,41 @@ class ServingEngine:
         return self.executor.warmup(**kw)
 
     def submit(self, req: Request):
-        """Reject invalid k here, at the request boundary — once a request
-        is queued, flush must be able to serve the whole queue."""
-        if req.k < 1:
-            raise ValueError(f"requested k={req.k} must be >= 1")
-        if req.k > self.config.ef:
-            raise ValueError(
-                f"requested k={req.k} exceeds the engine's "
-                f"ef={self.config.ef}; raise ef or lower k"
-            )
+        """Validate at the request boundary — once a request is queued,
+        flush must be able to serve (or individually fail) the whole
+        queue. Raises ``InvalidRequestError`` on a malformed request and
+        ``ShutdownError`` after ``close()``."""
+        if self.closed:
+            raise ShutdownError("ServingEngine is closed")
+        validate_request(req, dim=self.index.dim, ef=self.config.ef)
         self._queue.append((req, time.perf_counter()))
 
-    def flush(self) -> list[Result]:
+    def flush(self) -> list:
         """Serve the queue: group by k bucket, batch up to ``max_batch``,
-        pad to the executor's batch buckets. Results return in submission
-        order; each carries its own queue+batch latency."""
+        pad to the executor's batch buckets. Returns one entry per queued
+        request in submission order — a ``Result``, or (error isolation)
+        the exception that failed its batch: a failing flush takes down
+        only its own batch's requests and the engine stays serviceable."""
         queue, self._queue = self._queue, []
-        out: list[Result | None] = [None] * len(queue)
-        groups: dict[int, list[int]] = {}
-        for i, (req, _) in enumerate(queue):
-            groups.setdefault(self.config.bucket_k(req.k), []).append(i)
-        for kb, idxs in groups.items():
-            for s in range(0, len(idxs), self.max_batch):
-                self._run_batch(queue, idxs[s : s + self.max_batch], kb, out)
-        return out  # fully populated: every queue index was in one group
+        out: list = [None] * len(queue)
+        for kb, idxs in plan_flush(
+            [req for req, _ in queue], self.config, self.max_batch
+        ):
+            try:
+                self._run_batch(queue, idxs, kb, out)
+            except Exception as e:  # noqa: BLE001 — isolate to this batch
+                self._counts["flush_failures"] += 1
+                self._counts["failed"] += len(idxs)
+                for i in idxs:
+                    out[i] = e
+        return out  # fully populated: every queue index was in one batch
 
     def _run_batch(self, queue, idxs, kb, out):
         t0 = time.perf_counter()
         reqs = [queue[i][0] for i in idxs]
-        q = np.stack([r.vector for r in reqs])
-        lo = np.array([r.lo for r in reqs])
-        hi = np.array([r.hi for r in reqs])
-        L, R = self.index.ranks_of(lo, hi)
-        res = self.executor.search_ranks(q, L, R, k=kb)
-        ids = np.asarray(res.ids)
-        dists = np.asarray(res.dists)
-        orig = self.index.original_ids(ids)
+        orig, dists = run_search_batch(
+            self.index, self.executor, reqs, kb, faults=self.faults
+        )
         t1 = time.perf_counter()
         self._counts["served"] += len(reqs)
         self._counts["batches"] += 1
@@ -162,6 +265,29 @@ class ServingEngine:
             lat = t1 - t_submit
             self._latencies.append(lat)
             out[i] = Result(orig[row, : req.k], dists[row, : req.k], lat)
+
+    def close(self, *, drain: bool = True) -> list:
+        """Stop accepting requests; never silently drop pending ones.
+
+        drain=True serves the pending queue (one last ``flush``) and
+        returns its results; drain=False fails each pending request fast —
+        the returned list holds one ``ShutdownError`` per dropped request.
+        Idempotent; a shared (caller-provided) executor is left open."""
+        if self.closed:
+            return []
+        self.closed = True
+        if drain:
+            out = self.flush()
+        else:
+            pending, self._queue = self._queue, []
+            out = [
+                ShutdownError("ServingEngine closed before serving request")
+                for _ in pending
+            ]
+            self._counts["failed"] += len(pending)
+        if self._owns_executor:
+            self.executor.close()
+        return out
 
     @property
     def stats(self) -> dict:

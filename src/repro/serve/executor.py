@@ -49,6 +49,7 @@ class SearchExecutor:
         max_batch: int = 64,
         batch_buckets: tuple[int, ...] | None = None,
         warmup: bool | None = None,
+        faults=False,
     ):
         """index: a ``RangeGraphIndex``. config: the executor's default
         ``SearchConfig`` (per-call configs may differ; each is its own
@@ -56,7 +57,11 @@ class SearchExecutor:
         (sorted ascending, max element = max_batch) — the default is the
         power-of-two ladder; pass ``(max_batch,)`` to reproduce the
         historical always-pad-to-max behavior. warmup: AOT-compile the
-        full grid now (None = the ``REPRO_SERVE_WARMUP`` env)."""
+        full grid now (None = the ``REPRO_SERVE_WARMUP`` env). faults: an
+        explicit ``FaultConfig``/``FaultInjector`` injecting latency
+        spikes into ``search_ranks`` (``serve/faults.py``); the executor
+        never picks faults up from the env — results stay bit-exact, only
+        timing moves."""
         self.index = index
         self.config = config or SearchConfig()
         self.max_batch = int(max_batch)
@@ -76,6 +81,13 @@ class SearchExecutor:
         # decode happens inside the jitted search, at the edge)
         self._vec = jnp.asarray(index.vectors)
         self._nbrs = jnp.asarray(index.neighbors)
+        if faults:
+            from repro.serve import faults as faults_mod
+
+            self.faults = faults_mod.resolve(faults)
+        else:
+            self.faults = None
+        self.closed = False
         self._cache: dict = {}   # (config, batch_bucket, k_bucket) -> exe
         self.seen_k_buckets: set[int] = set()
         self.stats = {
@@ -154,6 +166,12 @@ class SearchExecutor:
         to ``[B, k]`` — bit-identical to the direct
         ``search_improvised`` call at the same config (padding and k
         rounding cannot leak into real rows)."""
+        if self.closed:
+            from repro.serve.errors import ShutdownError
+
+            raise ShutdownError("SearchExecutor is closed")
+        if self.faults is not None:
+            self.faults.maybe_latency()
         cfg = config or self.config
         if k > cfg.ef:
             raise ValueError(
@@ -179,6 +197,13 @@ class SearchExecutor:
         if kb == k:
             return res
         return res._replace(ids=res.ids[:, :k], dists=res.dists[:, :k])
+
+    def close(self):
+        """Release the compile cache and refuse further work
+        (``search_ranks`` raises ``ShutdownError``). Idempotent; stats
+        survive for post-mortem accounting."""
+        self.closed = True
+        self._cache.clear()
 
     def _run(self, q, L, R, kb, cfg):
         B = q.shape[0]

@@ -1,0 +1,166 @@
+"""Chaos soak: the serving loop's contracts must hold under fire.
+
+ISSUE acceptance pin: under injected latency spikes, flush exceptions and
+queue-full bursts at overload QPS, (1) every request resolves with exactly
+one typed terminal outcome, (2) expired requests are shed before they
+reach compute, (3) the post-warmup compile count stays 0 — batch
+formation never leaves the warmed bucket grid, whatever the arrival
+pattern the faults produce.
+
+The injector is seeded, so a failure here replays deterministically.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig, ServeConfig
+from repro.serve import (
+    AsyncServingEngine,
+    DeadlineExceededError,
+    FaultConfig,
+    FaultInjector,
+    InjectedFaultError,
+    OverloadedError,
+    Request,
+    Result,
+    SearchExecutor,
+    ShedError,
+    ShutdownError,
+)
+
+CFG = SearchConfig(ef=32, k_bucket=10)
+
+
+@pytest.fixture(scope="module")
+def serving():
+    rng = np.random.default_rng(47)
+    n, d = 256, 12
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    idx = RangeGraphIndex.build(
+        vectors, attrs, BuildConfig(m=8, ef_construction=32,
+                                    brute_threshold=32)
+    )
+    ex = SearchExecutor(idx, CFG, max_batch=4, warmup=True)
+    return idx, ex, rng
+
+
+def _req(rng, idx, k=5):
+    v = rng.standard_normal(idx.dim).astype(np.float32)
+    lo, hi = sorted(rng.uniform(0, 100, 2))
+    return Request(vector=v, lo=lo, hi=hi, k=k)
+
+
+def test_chaos_soak_exactly_once(serving):
+    idx, ex, rng = serving
+    faults = FaultInjector(FaultConfig(
+        kinds=("latency", "flush_error", "queue_full"),
+        latency_s=0.1, latency_rate=0.3,
+        flush_error_rate=0.2, queue_full_rate=0.2, seed=11,
+    ))
+    N = 120
+    reqs = [_req(rng, idx) for _ in range(N)]
+
+    async def fire(eng, r):
+        try:
+            res = await eng.submit(r, deadline_s=0.12)
+            assert isinstance(res, Result)
+            return "ok"
+        except OverloadedError:
+            return "rejected"
+        except ShedError:
+            return "shed"
+        except DeadlineExceededError:
+            return "timeout"
+        except ShutdownError:
+            return "shutdown"
+        except InjectedFaultError:
+            return "failed"
+        # anything else propagates and fails the test: outcomes are typed
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=faults,
+            serve=ServeConfig(deadline_s=0.12, max_queue=32,
+                              max_wait_s=0.005, deadline_margin_s=0.02,
+                              backpressure="reject"),
+        )
+        tasks = []
+        for r in reqs:
+            tasks.append(asyncio.ensure_future(fire(eng, r)))
+            await asyncio.sleep(0.002)   # ~500 qps offered: overload
+        outcomes = await asyncio.gather(*tasks)
+        await eng.aclose(drain=True)
+        return outcomes, eng.stats
+
+    outcomes, stats = asyncio.run(go())
+
+    # exactly-once: every submit produced one typed outcome
+    assert len(outcomes) == N
+    counts = {o: outcomes.count(o) for o in set(outcomes)}
+    assert sum(counts.values()) == N
+    # caller-observed outcomes reconcile with the engine's own accounting
+    assert counts.get("ok", 0) == stats["served"]
+    assert counts.get("shed", 0) == stats["shed"]
+    assert counts.get("rejected", 0) == stats["rejected"]
+    assert counts.get("failed", 0) == stats["failed"]
+    assert counts.get("timeout", 0) == stats["timeouts"]
+    assert counts.get("shutdown", 0) == stats["shutdown"]
+    # shed before compute: a shed request was never part of a dispatch
+    assert stats["shed"] + stats["dispatched"] <= stats["submitted"]
+    # the chaos actually happened (seeded, so this is stable)
+    assert faults.counts["latency"] > 0
+    assert faults.counts["flush_error"] > 0
+    assert faults.counts["queue_full"] > 0
+    assert stats["flush_failures"] > 0
+    # and through all of it, batch formation stayed on the warmed grid
+    assert ex.stats["compiles"] == ex.stats["warmup_compiles"]
+
+
+def test_flush_error_isolation_async(serving):
+    """An injected flush failure fails only its own flush's requests; the
+    next submit on the same engine serves normally."""
+    idx, ex, rng = serving
+    faults = FaultInjector(FaultConfig(kinds=("flush_error",),
+                                       flush_error_rate=1.0))
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=faults,
+            serve=ServeConfig(deadline_s=5.0, max_wait_s=0.0,
+                              deadline_margin_s=0.0),
+        )
+        with pytest.raises(InjectedFaultError):
+            await eng.submit(_req(rng, idx))
+        assert eng.stats["flush_failures"] == 1
+        faults.armed = False
+        res = await eng.submit(_req(rng, idx))   # regression: still alive
+        assert isinstance(res, Result)
+        await eng.aclose()
+        assert eng.stats["served"] == 1
+        assert eng.stats["failed"] == 1
+
+    asyncio.run(go())
+
+
+def test_env_faults_reach_only_the_async_loop(serving, monkeypatch):
+    """REPRO_FAULTS (the CI chaos leg) arms the async loop by default but
+    never the sync engine/executor — deterministic suites stay green."""
+    from repro.serve.engine import ServingEngine
+
+    idx, ex, rng = serving
+    monkeypatch.setenv("REPRO_FAULTS", "flush_error")
+    monkeypatch.setenv("REPRO_FAULT_FLUSH_ERROR_RATE", "1.0")
+
+    async def go():
+        eng = AsyncServingEngine(idx, executor=ex)   # faults=None: env
+        with pytest.raises(InjectedFaultError):
+            await eng.submit(_req(rng, idx))
+        await eng.aclose()
+
+    asyncio.run(go())
+    sync = ServingEngine(idx, executor=ex)           # env must NOT attach
+    assert sync.faults is None
+    sync.submit(_req(rng, idx))
+    assert isinstance(sync.flush()[0], Result)

@@ -159,3 +159,23 @@ def test_compact_index_serves(small_index):
     b = SearchExecutor(idx16, SearchConfig(ef=32), max_batch=4,
                        warmup=False).search_ranks(q, L, R, k=5)
     np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+def test_close_semantics(small_index):
+    """close() makes further searches fail fast with ShutdownError (typed,
+    not an attribute error off a cleared cache), keeps stats readable for
+    post-mortem, and is idempotent."""
+    from repro.serve.errors import ShutdownError
+
+    idx, rng = small_index
+    ex = SearchExecutor(idx, SearchConfig(ef=32, k_bucket=10), max_batch=4,
+                        warmup=False)
+    q, L, R = _workload(rng, idx, 2)
+    ex.search_ranks(q, L, R, k=5)
+    served_compiles = ex.stats["compiles"]
+    ex.close()
+    assert ex.closed
+    with pytest.raises(ShutdownError):
+        ex.search_ranks(q, L, R, k=5)
+    assert ex.stats["compiles"] == served_compiles  # stats survive close
+    ex.close()                                      # idempotent

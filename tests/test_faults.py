@@ -1,0 +1,116 @@
+"""serve/faults.py: the chaos harness itself must be deterministic.
+
+The injector is the instrument the chaos suite measures the serving stack
+with, so these tests pin the instrument: config validation, env parsing
+(via the explicit ``env=`` dict — the ambient ``REPRO_FAULTS`` of the CI
+chaos leg must not leak in), seed-determinism of the fault stream, and the
+``resolve()`` convention every serving component funnels its ``faults=``
+parameter through.
+"""
+import dataclasses
+
+import pytest
+
+from repro.serve.errors import InjectedFaultError
+from repro.serve.faults import FAULT_KINDS, FaultConfig, FaultInjector, \
+    resolve
+
+
+def test_config_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultConfig(kinds=("latency", "gremlins"))
+
+
+def test_config_rejects_bad_rates():
+    with pytest.raises(ValueError, match="latency_rate"):
+        FaultConfig(kinds=("latency",), latency_rate=1.5)
+    with pytest.raises(ValueError, match="flush_error_rate"):
+        FaultConfig(kinds=("flush_error",), flush_error_rate=-0.1)
+    with pytest.raises(ValueError, match="latency_s"):
+        FaultConfig(kinds=("latency",), latency_s=-1.0)
+
+
+def test_config_is_hashable_and_frozen():
+    cfg = FaultConfig(kinds=["latency"])   # list normalizes to tuple
+    assert cfg.kinds == ("latency",)
+    assert hash(cfg) == hash(FaultConfig(kinds=("latency",)))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.seed = 1
+
+
+def test_from_env_unset_and_blank():
+    assert FaultConfig.from_env(env={}) is None
+    assert FaultConfig.from_env(env={"REPRO_FAULTS": "  "}) is None
+    assert FaultConfig.from_env(env={"REPRO_FAULTS": ","}) is None
+
+
+def test_from_env_parses_kinds_and_knobs():
+    cfg = FaultConfig.from_env(env={
+        "REPRO_FAULTS": "latency, flush_error",
+        "REPRO_FAULT_LATENCY_S": "0.5",
+        "REPRO_FAULT_FLUSH_ERROR_RATE": "1.0",
+        "REPRO_FAULT_SEED": "42",
+    })
+    assert cfg.kinds == ("latency", "flush_error")
+    assert cfg.latency_s == 0.5
+    assert cfg.flush_error_rate == 1.0
+    assert cfg.seed == 42
+    assert cfg.latency_rate == 0.25   # default survives partial env
+
+
+def test_injector_is_deterministic_per_seed():
+    cfg = FaultConfig(kinds=FAULT_KINDS, queue_full_rate=0.5, seed=3)
+    a = FaultInjector(cfg)
+    b = FaultInjector(cfg)
+    seq_a = [a.queue_full() for _ in range(64)]
+    seq_b = [b.queue_full() for _ in range(64)]
+    assert seq_a == seq_b
+    assert any(seq_a) and not all(seq_a)
+    assert a.counts["queue_full"] == sum(seq_a)
+    c = FaultInjector(FaultConfig(kinds=FAULT_KINDS, queue_full_rate=0.5,
+                                  seed=4))
+    assert [c.queue_full() for _ in range(64)] != seq_a
+
+
+def test_flush_error_raises_typed_and_counts():
+    inj = FaultInjector(FaultConfig(kinds=("flush_error",),
+                                    flush_error_rate=1.0))
+    with pytest.raises(InjectedFaultError) as ei:
+        inj.maybe_flush_error()
+    assert ei.value.kind == "flush_error"
+    assert isinstance(ei.value, RuntimeError)
+    assert inj.counts["flush_error"] == 1
+    # kinds not enabled never fire, whatever their rate
+    assert inj.queue_full() is False
+    inj.maybe_latency()
+    assert inj.counts["latency"] == inj.counts["queue_full"] == 0
+
+
+def test_disarm_stops_firing_without_losing_counts():
+    inj = FaultInjector(FaultConfig(kinds=("queue_full",),
+                                    queue_full_rate=1.0))
+    assert inj.queue_full() is True
+    inj.armed = False
+    assert inj.queue_full() is False
+    assert inj.counts["queue_full"] == 1
+    inj.armed = True
+    assert inj.queue_full() is True
+    assert inj.counts["queue_full"] == 2
+
+
+def test_resolve_convention(monkeypatch):
+    # False disables injection even when the env asks for chaos (this is
+    # what keeps deterministic tests deterministic under the CI chaos leg)
+    monkeypatch.setenv("REPRO_FAULTS", "latency")
+    assert resolve(False) is None
+    inj = resolve(None)
+    assert isinstance(inj, FaultInjector)
+    assert inj.config.kinds == ("latency",)
+    monkeypatch.delenv("REPRO_FAULTS")
+    assert resolve(None) is None
+    cfg = FaultConfig(kinds=("latency",))
+    assert isinstance(resolve(cfg), FaultInjector)
+    shared = FaultInjector(cfg)
+    assert resolve(shared) is shared
+    with pytest.raises(TypeError, match="faults must be"):
+        resolve("latency")

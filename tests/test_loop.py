@@ -1,0 +1,339 @@
+"""AsyncServingEngine: deadlines, shedding, backpressure, drain.
+
+Each test drives the loop inside its own ``asyncio.run`` (pytest-asyncio
+is not a dependency). Deterministic tests pass ``faults=False`` so the CI
+chaos leg (``REPRO_FAULTS=...``) cannot perturb them; the tests that DO
+want a stalled flusher build their own injector with ``latency_rate=1.0``
+— a deterministic spike, not a probabilistic one.
+
+All engines share one module-scoped warmed executor (compiles once) —
+engines never close a shared executor, so every test starts on the same
+warmed grid and the module's final test asserts the whole file ran with
+zero post-warmup compiles.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import BuildConfig, RangeGraphIndex, SearchConfig, ServeConfig
+from repro.serve import (
+    AsyncServingEngine,
+    DeadlineExceededError,
+    FaultConfig,
+    InvalidRequestError,
+    OverloadedError,
+    Request,
+    Result,
+    SearchExecutor,
+    ServingEngine,
+    ShedError,
+    ShutdownError,
+)
+
+CFG = SearchConfig(ef=32, k_bucket=10)
+
+
+@pytest.fixture(scope="module")
+def serving():
+    rng = np.random.default_rng(31)
+    n, d = 256, 12
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    idx = RangeGraphIndex.build(
+        vectors, attrs, BuildConfig(m=8, ef_construction=32,
+                                    brute_threshold=32)
+    )
+    ex = SearchExecutor(idx, CFG, max_batch=4, warmup=True)
+    return idx, ex, rng
+
+
+def _req(rng, idx, k=5):
+    v = rng.standard_normal(idx.dim).astype(np.float32)
+    lo, hi = sorted(rng.uniform(0, 100, 2))
+    return Request(vector=v, lo=lo, hi=hi, k=k)
+
+
+def _stall(latency_s):
+    """An injector that stalls EVERY flush by latency_s (deterministic)."""
+    return FaultConfig(kinds=("latency",), latency_s=latency_s,
+                       latency_rate=1.0)
+
+
+def test_serves_and_matches_sync_engine(serving):
+    idx, ex, rng = serving
+    reqs = [_req(rng, idx) for _ in range(6)]
+
+    async def go():
+        async with AsyncServingEngine(idx, executor=ex,
+                                      faults=False) as eng:
+            return await asyncio.gather(*(eng.submit(r) for r in reqs))
+
+    got = asyncio.run(go())
+    sync = ServingEngine(idx, executor=ex, faults=False)
+    for r in reqs:
+        sync.submit(r)
+    want = sync.flush()
+    for g, w, r in zip(got, want, reqs):
+        assert isinstance(g, Result)
+        assert g.ids.shape == (r.k,)
+        np.testing.assert_array_equal(g.ids, w.ids)
+        np.testing.assert_array_equal(g.dists, w.dists)
+
+
+def test_validation_rejects_before_queueing(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        async with AsyncServingEngine(idx, executor=ex,
+                                      faults=False) as eng:
+            bad = [
+                Request(np.zeros(idx.dim, np.float32), 0.0, 1.0, k=0),
+                Request(np.zeros(idx.dim, np.float32), 0.0, 1.0, k=64),
+                Request(np.zeros(idx.dim + 1, np.float32), 0.0, 1.0, k=5),
+                Request(np.full(idx.dim, np.nan, np.float32), 0.0, 1.0,
+                        k=5),
+                Request(np.zeros(idx.dim, np.float32), 5.0, 1.0, k=5),
+                Request(np.zeros(idx.dim, np.float32), np.nan, 1.0, k=5),
+            ]
+            for r in bad:
+                with pytest.raises(InvalidRequestError):
+                    await eng.submit(r)
+            assert eng.stats["submitted"] == 0
+            # the engine still serves clean traffic afterwards
+            res = await eng.submit(_req(rng, idx))
+            assert isinstance(res, Result)
+
+    asyncio.run(go())
+
+
+def test_expired_queued_requests_shed_before_compute(serving):
+    """While a latency spike burns inside one flush (worker thread), a
+    short-deadline queued request expires: the reaper sheds it and it
+    never reaches the executor (dispatched stays at the first batch)."""
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=_stall(0.6),
+            serve=ServeConfig(deadline_s=5.0, max_wait_s=0.0,
+                              deadline_margin_s=0.0),
+        )
+        first = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.2)     # flusher is now asleep in the spike
+        with pytest.raises(ShedError):
+            await eng.submit(_req(rng, idx), deadline_s=0.1)
+        assert eng.stats["shed"] == 1
+        assert eng.stats["dispatched"] == 1   # the shed one never ran
+        assert isinstance(await first, Result)
+        await eng.aclose()
+        return eng.stats
+
+    stats = asyncio.run(go())
+    assert stats["served"] == 1
+
+
+def test_shed_expired_false_times_out_instead(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=_stall(0.6),
+            serve=ServeConfig(deadline_s=5.0, max_wait_s=0.0,
+                              deadline_margin_s=0.0, shed_expired=False),
+        )
+        first = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.2)
+        with pytest.raises(DeadlineExceededError):
+            await eng.submit(_req(rng, idx), deadline_s=0.1)
+        await first
+        await eng.aclose()
+
+    asyncio.run(go())
+
+
+def test_inflight_deadline_fires_during_latency_spike(serving):
+    """The reaper delivers DeadlineExceededError while the flush is still
+    running in its worker thread — an executor stall cannot freeze timeout
+    delivery. The late result is counted, not double-delivered."""
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=_stall(0.5),
+            serve=ServeConfig(deadline_s=0.15, max_wait_s=0.0,
+                              deadline_margin_s=0.0),
+        )
+        with pytest.raises(DeadlineExceededError):
+            await eng.submit(_req(rng, idx))
+        assert eng.stats["timeouts"] == 1
+        # let the spiking flush finish: its result must be counted late,
+        # not delivered into the already-failed future
+        await asyncio.sleep(0.6)
+        assert eng.stats["late_results"] == 1
+        assert eng.stats["served"] == 0
+        await eng.aclose()
+
+    asyncio.run(go())
+
+
+def test_backpressure_reject(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=_stall(0.5),
+            serve=ServeConfig(deadline_s=5.0, max_queue=1, max_wait_s=0.0,
+                              deadline_margin_s=0.0, backpressure="reject"),
+        )
+        # 1st occupies the flusher (spike), 2nd fills the queue, 3rd must
+        # be rejected at admission without ever queueing
+        t1 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.2)
+        t2 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.05)
+        with pytest.raises(OverloadedError):
+            await eng.submit(_req(rng, idx))
+        assert eng.stats["rejected"] == 1
+        assert isinstance(await t1, Result)
+        assert isinstance(await t2, Result)
+        await eng.aclose()
+
+    asyncio.run(go())
+
+
+def test_backpressure_block_waits_for_space(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=_stall(0.3),
+            serve=ServeConfig(deadline_s=5.0, max_queue=1, max_wait_s=0.0,
+                              deadline_margin_s=0.0, backpressure="block"),
+        )
+        t1 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.1)
+        t2 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.05)
+        # blocks while the queue is full, then admits once it drains
+        t3 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        out = await asyncio.gather(t1, t2, t3)
+        assert all(isinstance(r, Result) for r in out)
+        assert eng.stats["rejected"] == 0
+        await eng.aclose()
+
+    asyncio.run(go())
+
+
+def test_backpressure_block_respects_deadline(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=_stall(0.6),
+            serve=ServeConfig(deadline_s=5.0, max_queue=1, max_wait_s=0.0,
+                              deadline_margin_s=0.0, backpressure="block"),
+        )
+        t1 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.2)
+        t2 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.05)
+        with pytest.raises(DeadlineExceededError):
+            await eng.submit(_req(rng, idx), deadline_s=0.1)
+        await asyncio.gather(t1, t2)
+        await eng.aclose()
+
+    asyncio.run(go())
+
+
+def test_aclose_drains_pending(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=False,
+            serve=ServeConfig(deadline_s=5.0, max_wait_s=5.0),
+        )
+        # long max_wait: these would linger, but aclose must flush them
+        tasks = [asyncio.ensure_future(eng.submit(_req(rng, idx)))
+                 for _ in range(3)]
+        await asyncio.sleep(0.05)
+        await eng.aclose(drain=True)
+        out = await asyncio.gather(*tasks)
+        assert all(isinstance(r, Result) for r in out)
+        assert eng.stats["shutdown"] == 0
+        with pytest.raises(ShutdownError):
+            await eng.submit(_req(rng, idx))
+
+    asyncio.run(go())
+
+
+def test_aclose_no_drain_fails_fast(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=_stall(0.5),
+            serve=ServeConfig(deadline_s=5.0, max_wait_s=0.0,
+                              deadline_margin_s=0.0),
+        )
+        t1 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.2)   # t1 in flight (spiking), t2 queued
+        t2 = asyncio.ensure_future(eng.submit(_req(rng, idx)))
+        await asyncio.sleep(0.05)
+        await eng.aclose(drain=False)
+        with pytest.raises(ShutdownError):
+            await t2
+        # the in-flight request fails fast too: exactly one outcome each
+        with pytest.raises(ShutdownError):
+            await t1
+        assert eng.stats["shutdown"] == 2
+
+    asyncio.run(go())
+
+
+def test_deadline_margin_flushes_early(serving):
+    """With a huge max_wait the loop would linger forever; the deadline
+    margin forces the flush in time to serve the request."""
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=False,
+            serve=ServeConfig(deadline_s=0.5, max_wait_s=30.0,
+                              deadline_margin_s=0.4),
+        )
+        res = await eng.submit(_req(rng, idx))
+        assert isinstance(res, Result)
+        await eng.aclose()
+
+    asyncio.run(go())
+
+
+def test_full_batch_flushes_immediately(serving):
+    idx, ex, rng = serving
+
+    async def go():
+        eng = AsyncServingEngine(
+            idx, executor=ex, faults=False,
+            serve=ServeConfig(deadline_s=30.0, max_wait_s=30.0,
+                              deadline_margin_s=0.1),
+        )
+        # max_batch (4) submissions: the loop must not wait out max_wait_s
+        out = await asyncio.wait_for(
+            asyncio.gather(*(eng.submit(_req(rng, idx))
+                             for _ in range(ex.max_batch))),
+            timeout=10.0,
+        )
+        assert all(isinstance(r, Result) for r in out)
+        assert eng.stats["flushes"] >= 1
+        await eng.aclose()
+
+    asyncio.run(go())
+
+
+def test_zero_post_warmup_compiles_across_module(serving):
+    """Runs last (file order): every flush in this file — partial batches,
+    mixed arrival patterns, spikes, drains — stayed on the warmed grid."""
+    idx, ex, rng = serving
+    assert ex.stats["compiles"] == ex.stats["warmup_compiles"] > 0

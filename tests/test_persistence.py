@@ -1,0 +1,140 @@
+"""Checksummed index persistence: corruption is caught and NAMED.
+
+``RangeGraphIndex.save`` writes a crc32 per array inside the
+sha256-checksummed msgpack envelope; ``load`` verifies both layers and
+raises :class:`IndexCorruptionError` carrying the offending field — a
+truncated or bit-flipped file must fail loudly at load time, never
+surface as a garbage search result or a reshape error three layers down.
+Pre-checksum files (no per-array crc32) still load, with a warning.
+
+The corruption helpers rewrite a real saved file through the same
+msgpack+compression envelope the index uses, recomputing the envelope
+sha, so each test hits exactly the integrity layer it targets.
+"""
+import hashlib
+
+import msgpack
+import numpy as np
+import pytest
+
+from repro import compressio
+from repro.core import BuildConfig, IndexCorruptionError, RangeGraphIndex
+
+
+@pytest.fixture(scope="module")
+def saved(tmp_path_factory):
+    rng = np.random.default_rng(5)
+    n, d = 128, 8
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 10, n)
+    idx = RangeGraphIndex.build(
+        vectors, attrs, BuildConfig(m=4, ef_construction=16,
+                                    brute_threshold=16)
+    )
+    path = tmp_path_factory.mktemp("persist") / "index.bin"
+    idx.save(str(path))
+    return idx, str(path)
+
+
+def _read_payload(path):
+    with open(path, "rb") as f:
+        outer = msgpack.unpackb(compressio.decompress(f.read()))
+    return msgpack.unpackb(outer["payload"])
+
+
+def _write_payload(path, payload, *, sha=None):
+    """Re-envelope a (possibly mutated) payload; ``sha`` overrides the
+    recomputed digest to fabricate an envelope-level mismatch."""
+    raw = msgpack.packb(payload)
+    digest = hashlib.sha256(raw).hexdigest() if sha is None else sha
+    blob = msgpack.packb({"sha256": digest, "payload": raw})
+    with open(path, "wb") as f:
+        f.write(compressio.compress(blob, level=3))
+
+
+def _rewrite(src, dst, mutate):
+    payload = _read_payload(src)
+    mutate(payload)
+    _write_payload(dst, payload)
+
+
+def test_roundtrip_intact(saved):
+    idx, path = saved
+    loaded = RangeGraphIndex.load(path)
+    np.testing.assert_array_equal(loaded.vectors, idx.vectors)
+    np.testing.assert_array_equal(loaded.neighbors, idx.neighbors)
+    np.testing.assert_array_equal(loaded.attrs, idx.attrs)
+    np.testing.assert_array_equal(loaded.perm, idx.perm)
+
+
+@pytest.mark.parametrize("field", ["vectors", "neighbors", "attrs", "perm"])
+def test_bit_flip_names_the_field(saved, tmp_path, field):
+    _, path = saved
+    bad = str(tmp_path / f"flip_{field}.bin")
+
+    def flip(payload):
+        data = bytearray(payload[field]["data"])
+        data[len(data) // 2] ^= 0x40
+        payload[field]["data"] = bytes(data)
+
+    _rewrite(path, bad, flip)
+    with pytest.raises(IndexCorruptionError, match="checksum mismatch") \
+            as ei:
+        RangeGraphIndex.load(bad)
+    assert ei.value.field == field
+    assert field in str(ei.value)
+
+
+def test_truncation_names_the_field(saved, tmp_path):
+    _, path = saved
+    bad = str(tmp_path / "trunc.bin")
+
+    def trunc(payload):
+        payload["neighbors"]["data"] = payload["neighbors"]["data"][:-8]
+
+    _rewrite(path, bad, trunc)
+    with pytest.raises(IndexCorruptionError, match="truncated") as ei:
+        RangeGraphIndex.load(bad)
+    assert ei.value.field == "neighbors"
+
+
+def test_pre_checksum_file_loads_with_warning(saved, tmp_path):
+    idx, path = saved
+    legacy = str(tmp_path / "legacy.bin")
+
+    def strip_crcs(payload):
+        for field in ("vectors", "neighbors", "attrs", "perm"):
+            payload[field].pop("crc32")
+
+    _rewrite(path, legacy, strip_crcs)
+    with pytest.warns(UserWarning, match="predates per-array checksums"):
+        loaded = RangeGraphIndex.load(legacy)
+    np.testing.assert_array_equal(loaded.vectors, idx.vectors)
+    np.testing.assert_array_equal(loaded.neighbors, idx.neighbors)
+
+
+def test_envelope_sha_mismatch(saved, tmp_path):
+    _, path = saved
+    bad = str(tmp_path / "sha.bin")
+    _write_payload(bad, _read_payload(path), sha="0" * 64)
+    with pytest.raises(IndexCorruptionError, match="checksum mismatch") \
+            as ei:
+        RangeGraphIndex.load(bad)
+    assert ei.value.field == "envelope"
+
+
+def test_garbage_file_is_envelope_corruption(tmp_path):
+    bad = str(tmp_path / "garbage.bin")
+    with open(bad, "wb") as f:
+        f.write(b"this is not an index file at all")
+    with pytest.raises(IndexCorruptionError) as ei:
+        RangeGraphIndex.load(bad)
+    assert ei.value.field == "envelope"
+
+
+def test_corruption_error_is_ioerror():
+    # historical call sites catch IOError around load(); the typed error
+    # must keep flowing through them
+    e = IndexCorruptionError("vectors", "boom")
+    assert isinstance(e, IOError)
+    assert e.field == "vectors"

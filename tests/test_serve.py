@@ -225,6 +225,143 @@ def test_latency_percentiles(small_index):
     assert len({r.latency_s for r in results}) >= 2  # two batches flushed
 
 
+def test_validation_typed_errors(small_index):
+    """Edge validation raises InvalidRequestError (a ValueError) for every
+    malformed-request class BEFORE queueing — the queue never holds a
+    request flush can't serve."""
+    from repro.serve.errors import InvalidRequestError
+
+    idx, rng = small_index
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4, warmup=False)
+    v = np.zeros(idx.dim, np.float32)
+    cases = [
+        (Request(np.zeros(idx.dim + 2, np.float32), 0.0, 1.0, k=5),
+         "does not match index dim"),
+        (Request(np.zeros((2, idx.dim), np.float32), 0.0, 1.0, k=5),
+         "does not match index dim"),
+        (Request(np.full(idx.dim, np.inf, np.float32), 0.0, 1.0, k=5),
+         "NaN/Inf"),
+        (Request(v, 5.0, 1.0, k=5), "inverted range"),
+        (Request(v, np.nan, 1.0, k=5), "must not be NaN"),
+        (Request(v, 0.0, np.nan, k=5), "must not be NaN"),
+    ]
+    for req, match in cases:
+        with pytest.raises(InvalidRequestError, match=match):
+            eng.submit(req)
+    assert isinstance(InvalidRequestError("x"), ValueError)
+    # open ranges are legal; the queue holds only servable requests
+    eng.submit(Request(v, -np.inf, np.inf, k=5))
+    assert len(eng.flush()) == 1
+
+
+def test_flush_error_isolation(small_index):
+    """An exception inside one batch fails only that batch's requests
+    (their slots hold the exception) and the engine stays serviceable —
+    the regression is submitting AFTER the failed flush."""
+    from repro.serve.errors import InjectedFaultError
+    from repro.serve.faults import FaultConfig, FaultInjector
+
+    idx, rng = small_index
+    inj = FaultInjector(FaultConfig(kinds=("flush_error",),
+                                    flush_error_rate=1.0))
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4, warmup=False, faults=inj)
+    for r in _requests(rng, idx, [5, 5, 5]):
+        eng.submit(r)
+    out = eng.flush()
+    assert len(out) == 3
+    assert all(isinstance(o, InjectedFaultError) for o in out)
+    assert eng.stats["failed"] == 3
+    assert eng.stats["flush_failures"] == 1
+    inj.armed = False
+    for r in _requests(rng, idx, [5, 5]):    # engine still serviceable
+        eng.submit(r)
+    out = eng.flush()
+    assert all(o.latency_s > 0 for o in out)
+    assert eng.stats["served"] == 2
+
+
+def test_flush_error_isolated_per_batch(small_index):
+    """Two k-bucket groups flush as separate batches: a failure injected
+    into the first leaves the second's results intact."""
+    from repro.serve.errors import InjectedFaultError
+    from repro.serve.faults import FaultConfig, FaultInjector
+
+    idx, rng = small_index
+    inj = FaultInjector(FaultConfig(kinds=("flush_error",),
+                                    flush_error_rate=1.0))
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4, warmup=False, faults=inj)
+    orig = inj.maybe_flush_error
+
+    def one_shot():   # fire on the first batch only, then disarm
+        try:
+            orig()
+        finally:
+            inj.armed = False
+
+    inj.maybe_flush_error = one_shot
+    for r in _requests(rng, idx, [5, 5, 15]):   # buckets 10 and 20
+        eng.submit(r)
+    out = eng.flush()
+    fails = [o for o in out if isinstance(o, InjectedFaultError)]
+    oks = [o for o in out if not isinstance(o, Exception)]
+    assert len(fails) == 2 and len(oks) == 1    # only bucket-10 batch died
+    assert eng.stats["flush_failures"] == 1
+
+
+def test_close_drains_pending(small_index):
+    from repro.serve.errors import ShutdownError
+
+    idx, rng = small_index
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4, warmup=False)
+    for r in _requests(rng, idx, [5, 5]):
+        eng.submit(r)
+    out = eng.close(drain=True)
+    assert len(out) == 2 and all(not isinstance(o, Exception) for o in out)
+    with pytest.raises(ShutdownError):
+        eng.submit(_requests(rng, idx, [5])[0])
+    assert eng.close() == []   # idempotent
+
+
+def test_close_no_drain_fails_pending_fast(small_index):
+    from repro.serve.errors import ShutdownError
+
+    idx, rng = small_index
+    eng = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                        max_batch=4, warmup=False)
+    for r in _requests(rng, idx, [5, 5, 5]):
+        eng.submit(r)
+    out = eng.close(drain=False)
+    assert len(out) == 3
+    assert all(isinstance(o, ShutdownError) for o in out)
+    assert eng.stats["failed"] == 3
+    assert eng.stats["served"] == 0
+
+
+def test_close_leaves_shared_executor_open(small_index):
+    from repro.serve.errors import ShutdownError
+    from repro.serve.executor import SearchExecutor
+
+    idx, rng = small_index
+    ex = SearchExecutor(idx, SearchConfig(ef=32, k_bucket=10), max_batch=4,
+                        warmup=False)
+    eng = ServingEngine(idx, executor=ex)
+    eng.close()
+    assert not ex.closed                 # shared: caller owns its lifetime
+    eng2 = ServingEngine(idx, config=SearchConfig(ef=32, k_bucket=10),
+                         max_batch=4, warmup=False)
+    eng2.close()
+    assert eng2.executor.closed          # owned: closed with the engine
+    with pytest.raises(ShutdownError):
+        eng2.executor.search_ranks(
+            np.zeros((1, idx.dim), np.float32),
+            np.zeros(1, np.int32), np.full(1, idx.n - 1, np.int32), k=5,
+        )
+
+
 def test_legacy_kwargs_shim(small_index):
     """The historical loose-kwarg constructor still works (deprecation
     shim) and lands on the same config."""
