@@ -9,7 +9,9 @@ records (``BENCH_hotpath.json``, ``BENCH_build.json``,
   * **shape / correctness — hard fail** (exit 1): a smoke artifact is
     missing or unparseable (the benchmark crashed), its schema lost a
     required section (a refactor silently dropped a measurement), a
-    fused-vs-baseline speedup is non-finite, the build benchmark's
+    fused-vs-baseline speedup is non-finite, the hot-path record lost its
+    ``autotune`` picks (the block-size autotuner stopped measuring or
+    recording), the build benchmark's
     backend-parity check reported a divergence, the compact-storage
     section regressed — footprint ratio above ``--max-footprint-ratio``
     (default 0.55), |recall@10 delta| above ``--max-recall-delta``
@@ -21,9 +23,11 @@ records (``BENCH_hotpath.json``, ``BENCH_build.json``,
     so they hard-fail even on shared runners.
   * **timing — soft warn** (exit 0, GitHub warning annotation): a smoke
     fused-vs-baseline ratio regressed more than ``--tolerance`` (default
-    25%) relative to the committed record. Smoke shapes are tiny and shared
-    runners are noisy, so timing only hard-fails under ``--strict`` (for
-    dedicated hardware).
+    25%) relative to the committed record, or an autotuner pick drifted
+    from the committed one (picks are min-of-iters timings on pinned probe
+    shapes, so they legitimately move across hosts). Smoke shapes are tiny
+    and shared runners are noisy, so timing only hard-fails under
+    ``--strict`` (for dedicated hardware).
 
 Baselines come from the committed records' ``smoke_ref`` section — the
 same-shape ratios written by ``hotpath.py --smoke --update-smoke-ref`` /
@@ -52,6 +56,7 @@ GATES = {
     ("BENCH_hotpath.json", "BENCH_hotpath_smoke.json"): [
         ("expansion_step", "speedup"),
         ("edge_select_step", "speedup"),
+        ("hop_fused", "speedup"),
         ("serve_latency", "small_batch_speedup"),
     ],
     ("BENCH_build.json", "BENCH_build_smoke.json"): [
@@ -138,6 +143,41 @@ def _check_storage(smoke, name, args, errors):
     if sf.get("neighbor_codec_ids_identical") is not True:
         errors.append(
             f"{name}: int16/int32 neighbor codecs returned different ids")
+
+
+_AUTOTUNE_KINDS = ("hop", "gather_dist", "edge_select", "prune")
+
+
+def _check_autotune(smoke, committed, name, errors, warnings):
+    """Autotuner-record gate: schema is hard, pick drift is soft.
+
+    A missing/malformed ``autotune`` section means the benchmark stopped
+    measuring (or recording) the block-size picks — hard fail, like any
+    dropped section. A *changed* pick only warns: picks are min-of-iters
+    timings on pinned probe shapes, so they legitimately move across hosts
+    and runner load.
+    """
+    at = smoke.get("autotune")
+    picks = at.get("picks") if isinstance(at, dict) else None
+    if not isinstance(picks, dict):
+        errors.append(f"{name}: autotune section missing or malformed")
+        return
+    missing = [k for k in _AUTOTUNE_KINDS
+               if not isinstance(picks.get(k), dict) or not picks[k]]
+    if missing:
+        errors.append(f"{name}: autotune picks missing for {missing}")
+        return
+    print(f"ok: {name} autotune picks recorded for "
+          f"{len(_AUTOTUNE_KINDS)} kernels")
+    ref = (committed.get("autotune") or {}).get("picks")
+    if not isinstance(ref, dict):
+        return  # committed record predates the autotuner
+    for kind in _AUTOTUNE_KINDS:
+        want, got = ref.get(kind), picks.get(kind)
+        if want is not None and got != want:
+            warnings.append(
+                f"{name} autotune pick drift for {kind}: smoke {got} vs "
+                f"committed {want}")
 
 
 def _check_serve(smoke, name, errors):
@@ -292,6 +332,7 @@ def main(argv=None):
         if smoke_name == "BENCH_hotpath_smoke.json":
             _check_storage(smoke, smoke_name, args, errors)
             _check_serve(smoke, smoke_name, errors)
+            _check_autotune(smoke, committed, smoke_name, errors, warnings)
         if smoke_name == "BENCH_serve_slo_smoke.json":
             _check_slo(smoke, committed, smoke_name, args, errors, warnings)
         for section, key in keys:

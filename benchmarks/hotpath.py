@@ -15,6 +15,22 @@ Three measurements, emitted to ``artifacts/BENCH_hotpath.json``:
     against the sort-free one (equality-matrix dedup + masked argmin top-m,
     ``kernels/ref.py::select_edges`` / the Pallas edge-selection kernel on
     TPU).
+  * ``hop_fused`` — one WHOLE beam-search hop, three ways: the seed
+    composition (argsort edge selection + dense ``bool[B, n]`` visited +
+    HBM gather/einsum distances, three separate launches), today's
+    composed dispatch (``ops.hop(impl="composed")``, still three
+    launches), and the fused ``ops.hop`` (one launch: the Pallas
+    megakernel on TPU, the one-program jnp hop off-TPU). ``speedup`` is
+    fused vs the seed composition — the same seed-vs-fused framing as
+    ``expansion_step``, now over the full hop; ``launch_fusion_speedup``
+    is fused vs the modern composed three-launch path and isolates the
+    launch fusion alone (≈1.0 off-TPU, where both sides compile to
+    near-identical XLA; the VMEM-residency win needs the real TPU).
+    Composed and fused outputs are asserted identical before timing.
+  * ``autotune`` — measured block-size / pipeline-depth picks for every
+    Pallas kernel (``kernels/autotune.py``) on pinned probe shapes; the
+    winners are installed process-wide (they feed the ``ops.py`` Pallas
+    branches) and recorded here so ``ci_gate.py`` can flag pick drift.
   * ``search_sweep`` — end-to-end ``search_ranks`` qps/recall over
     ``expand_width`` in {1, 2, 4, 8} and over ``edge_impl`` backends on a
     CPU-tractable index, giving future PRs a perf trajectory.
@@ -58,7 +74,26 @@ from repro.core import SearchConfig, bitset
 from repro.core import edge_select as edge_select_mod
 from repro.core import storage as storage_mod
 from repro.core.search import _pairdist
+from repro.kernels import autotune as autotune_mod
+from repro.kernels import edge_select as edge_select_k
+from repro.kernels import gather_distance as gather_k
+from repro.kernels import hop as hop_k
 from repro.kernels import ops
+from repro.kernels import prune as prune_k
+
+
+def _elemental_table(rng, n, m, logn):
+    """Synthetic but structurally valid elemental-graph table: every edge
+    stays inside its layer's segment, 15% of slots are -1 padding."""
+    layers = logn + 1
+    base = rng.integers(0, n, (n, layers, m)).astype(np.int32)
+    u_ids = np.arange(n, dtype=np.int32)[:, None, None]
+    shift = (logn - np.arange(layers, dtype=np.int32))[None, :, None]
+    seg_lo = (u_ids >> shift) << shift
+    seg_size = (1 << shift)
+    nbrs = np.minimum(seg_lo + base % seg_size, n - 1).astype(np.int32)
+    nbrs[rng.random(nbrs.shape) < 0.15] = -1
+    return nbrs
 
 
 def bench_expansion_step(B, n, d, M, iters, dist_impl):
@@ -110,14 +145,7 @@ def bench_edge_select(B, n, m, iters, edge_impl):
     rng = np.random.default_rng(1)
     logn = max(int(np.ceil(np.log2(max(n, 2)))), 1)
     layers = logn + 1
-    # synthetic but structurally valid table: edges stay in-segment
-    base = rng.integers(0, n, (n, layers, m)).astype(np.int32)
-    u_ids = np.arange(n, dtype=np.int32)[:, None, None]
-    shift = (logn - np.arange(layers, dtype=np.int32))[None, :, None]
-    seg_lo = (u_ids >> shift) << shift
-    seg_size = (1 << shift)
-    nbrs = np.minimum(seg_lo + base % seg_size, n - 1).astype(np.int32)
-    nbrs[rng.random(nbrs.shape) < 0.15] = -1
+    nbrs = _elemental_table(rng, n, m, logn)
 
     F = B * 4  # the flattened [B*W] frontier at the default expand_width
     us = jnp.asarray(rng.integers(0, n, F).astype(np.int32))
@@ -152,6 +180,163 @@ def bench_edge_select(B, n, m, iters, edge_impl):
         "sortfree_us": sortfree_s * 1e6,
         "speedup": argsort_s / sortfree_s,
         "edge_impl": edge_impl,
+    }
+
+
+def bench_hop_fused(B, n, d, M, iters, hop_impl):
+    """One whole beam-search hop (edge improvisation + visited test-and-set
+    + gather-distance), three ways — see the module docstring. Integer
+    outputs of the composed and fused paths are asserted bit-identical and
+    distances allclose before anything is timed."""
+    rng = np.random.default_rng(3)
+    W, m_out = 4, M
+    logn = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    layers = logn + 1
+    nbrs = jnp.asarray(_elemental_table(rng, n, M, logn))
+    table = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    u = jnp.asarray(rng.integers(0, n, (B, W)).astype(np.int32))
+    L = jnp.asarray(rng.integers(0, n // 2, B * W).astype(np.int32))
+    R = L + n // 2 - 1
+    vis = bitset.make(B, n)
+    dense = jnp.zeros((B, n), bool)
+    exp_ok = jnp.ones((B, W), bool)
+
+    # -- seed composition: argsort select / dense visited / HBM gather ------
+    @jax.jit
+    def seed_select(u):
+        return edge_select_mod.select_edges_batch(
+            nbrs, u.reshape(B * W), L, R, logn=logn, m_out=m_out
+        ).reshape(B, W * m_out)
+
+    @jax.jit
+    def seed_visited(dense, nbr, exp_ok):
+        pre = (nbr >= 0) & jnp.repeat(exp_ok, m_out, axis=1)
+        b = jnp.arange(B)[:, None]
+        seen = dense[b, jnp.maximum(nbr, 0)]
+        nvalid = pre & ~seen
+        dense = dense.at[b, jnp.maximum(nbr, 0)].max(nvalid)
+        return dense, nvalid
+
+    @jax.jit
+    def seed_gdist(nbr, nvalid):
+        nx = table[jnp.maximum(nbr, 0)]                   # [B, WM, d] in HBM
+        return jnp.where(nvalid, _pairdist(q, nx, "l2"), jnp.inf)
+
+    def seed_hop(u, exp_ok, dense):
+        nbr = seed_select(u)
+        dense, nvalid = seed_visited(dense, nbr, exp_ok)
+        return nbr, seed_gdist(nbr, nvalid), nvalid, dense
+
+    # -- modern composed dispatch, still three launches ---------------------
+    @jax.jit
+    def c_select(u):
+        return ops.select_edges(
+            nbrs, u.reshape(B * W), L, R, logn=logn, m_out=m_out
+        ).reshape(B, W * m_out)
+
+    @jax.jit
+    def c_bitset(vis, nbr, exp_ok):
+        pre = (nbr >= 0) & jnp.repeat(exp_ok, m_out, axis=1)
+        vis, seen = bitset.test_and_set(vis, nbr, pre)
+        return vis, pre & ~seen
+
+    @jax.jit
+    def c_gdist(nbr, nvalid):
+        return ops.gather_dist(q, table, jnp.where(nvalid, nbr, -1))
+
+    def composed_hop(u, exp_ok, vis):
+        nbr = c_select(u)
+        vis, nvalid = c_bitset(vis, nbr, exp_ok)
+        return nbr, c_gdist(nbr, nvalid), nvalid, vis
+
+    # -- fused: one launch --------------------------------------------------
+    @jax.jit
+    def fused_hop(u, exp_ok, vis):
+        return ops.hop(q, table, nbrs, u, L, R, vis, exp_ok,
+                       logn=logn, m_out=m_out, impl=hop_impl)
+
+    # parity before timing: composed vs fused must be identical; the seed
+    # composition must improvise the same edges (its newly-visited mask is
+    # NOT compared — the dense formulation marks in-row duplicate ids
+    # visited twice, the exactly-once defect the packed bitset fixed)
+    a = seed_hop(u, exp_ok, dense)
+    b = composed_hop(u, exp_ok, vis)
+    c = fused_hop(u, exp_ok, vis)
+    assert np.array_equal(np.asarray(a[0]), np.asarray(b[0])), \
+        "seed vs composed edge ids diverged"
+    for x, y, what in zip(b, c, ("nbr", "ndist", "nvalid", "visited")):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.dtype.kind == "f":
+            ok = np.allclose(x, y, rtol=1e-5, atol=1e-5, equal_nan=True)
+        else:
+            ok = np.array_equal(x, y)
+        assert ok, f"composed vs fused hop diverged on {what}"
+
+    seed_s = time_it(seed_hop, u, exp_ok, dense, iters=iters)
+    composed_s = time_it(composed_hop, u, exp_ok, vis, iters=iters)
+    fused_s = time_it(fused_hop, u, exp_ok, vis, iters=iters)
+    return {
+        "W": int(W), "m_out": int(m_out), "K": int(layers * M),
+        "logn": int(logn), "hop_impl": hop_impl,
+        "seed_us": seed_s * 1e6,
+        "composed_us": composed_s * 1e6,
+        "fused_us": fused_s * 1e6,
+        "speedup": seed_s / fused_s,
+        "launch_fusion_speedup": composed_s / fused_s,
+    }
+
+
+def bench_autotune(iters=3, interpret=False):
+    """Measure block-size / pipeline-depth picks for every Pallas kernel on
+    pinned probe shapes and install the winners process-wide.
+
+    The probe shapes are deliberately identical between full and ``--smoke``
+    runs so the ``autotune.picks`` section is comparable across artifacts —
+    ``ci_gate.py`` hard-fails a missing/malformed section and soft-warns on
+    pick drift (timing is host-dependent). Off-TPU the kernels run under
+    the interpreter, so the picks only matter for interpret-mode runs; on a
+    TPU host the same probe drives the real Mosaic kernels.
+    """
+    B, n, d, m = 8, 4096, 32, 8
+    W, m_out, C = 4, 8, 64
+    rng = np.random.default_rng(7)
+    logn = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    nbrs = jnp.asarray(_elemental_table(rng, n, m, logn))
+    table = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    u = jnp.asarray(rng.integers(0, n, (B, W)).astype(np.int32))
+    L = jnp.asarray(rng.integers(0, n // 2, B * W).astype(np.int32))
+    R = L + n // 2 - 1
+    vis = bitset.make(B, n)
+    exp_ok = jnp.ones((B, W), bool)
+    gids = jnp.asarray(rng.integers(-1, n, (B, W * m_out)).astype(np.int32))
+    cand_ids = jnp.asarray(rng.integers(0, n, (B, C)).astype(np.int32))
+    cand_dists = jnp.asarray(rng.random((B, C)), jnp.float32)
+
+    runs = {
+        "hop": lambda **p: hop_k.hop_kernel_call(
+            q, table, nbrs, u, L, R, vis, exp_ok, logn=logn, m_out=m_out,
+            interpret=interpret, **p),
+        "gather_dist": lambda **p: gather_k.gather_distance_kernel_call(
+            q, table, gids, interpret=interpret, **p),
+        "edge_select": lambda **p: edge_select_k.edge_select_kernel_call(
+            nbrs, u.reshape(B * W), L, R, logn=logn, m_out=m_out,
+            interpret=interpret, **p),
+        "prune": lambda **p: prune_k.prune_kernel_call(
+            cand_ids, cand_dists, table, m=m, interpret=interpret, **p),
+    }
+    records = {}
+    for kind, run in runs.items():
+        rec = autotune_mod.autotune(kind, run, iters=iters)
+        autotune_mod.set_pick(kind, rec["best"])
+        records[kind] = rec
+    return {
+        "probe": {"B": B, "n": n, "d": d, "m": m, "W": W, "m_out": m_out,
+                  "C": C, "logn": int(logn), "iters": int(iters)},
+        "interpret": bool(interpret),
+        "picks": autotune_mod.all_picks(),
+        "records": records,
     }
 
 
@@ -326,7 +511,14 @@ def main(argv=None):
     # attributes the numbers correctly
     dist_impl = "pallas" if (args.interpret or backend == "tpu") else "xla"
     edge_impl = "pallas" if (args.interpret or backend == "tpu") else "xla"
+    hop_impl = "pallas" if (args.interpret or backend == "tpu") else "xla"
     kernel_interpreted = args.interpret and backend != "tpu"
+
+    # autotune first: the installed picks feed every later Pallas call
+    at = bench_autotune(iters=1 if args.smoke else 3,
+                        interpret=backend != "tpu")
+    print("autotune picks: " + "  ".join(
+        f"{k}={v}" for k, v in sorted(at["picks"].items())))
 
     step = bench_expansion_step(
         args.b, args.n, args.d, args.m, args.iters, dist_impl
@@ -342,6 +534,17 @@ def main(argv=None):
         f"edge select F={edge['frontier']} K={edge['K']}: "
         f"argsort {edge['argsort_us']:.1f}us  "
         f"sort-free {edge['sortfree_us']:.1f}us  ({edge['speedup']:.2f}x)"
+    )
+
+    hop = bench_hop_fused(
+        args.b, args.n, args.d, args.m, args.iters, hop_impl
+    )
+    print(
+        f"hop fused B={args.b} W={hop['W']} K={hop['K']}: "
+        f"seed {hop['seed_us']:.1f}us  composed {hop['composed_us']:.1f}us  "
+        f"fused[{hop['hop_impl']}] {hop['fused_us']:.1f}us  "
+        f"({hop['speedup']:.2f}x vs seed, "
+        f"{hop['launch_fusion_speedup']:.2f}x launch fusion)"
     )
 
     if args.smoke:
@@ -401,10 +604,12 @@ def main(argv=None):
         "config": {
             "B": args.b, "n": args.n, "d": args.d, "M": args.m,
             "iters": args.iters, "dist_impl": dist_impl,
-            "edge_impl": edge_impl,
+            "edge_impl": edge_impl, "hop_impl": hop_impl,
         },
         "expansion_step": step,
         "edge_select_step": edge,
+        "hop_fused": hop,
+        "autotune": at,
         "storage_footprint": storage,
         "serve_latency": serve,
         "search_sweep": sweep,
@@ -417,6 +622,7 @@ def main(argv=None):
             refs = {
                 "expansion_step.speedup": step["speedup"],
                 "edge_select_step.speedup": edge["speedup"],
+                "hop_fused.speedup": hop["speedup"],
                 "serve_latency.small_batch_speedup":
                     serve["small_batch_speedup"],
             }

@@ -41,6 +41,7 @@ DEFAULT_EXPAND_WIDTH = 4
 _METRICS = ("l2", "ip")
 _DIST_IMPLS = ("auto", "pallas", "xla")
 _EDGE_IMPLS = ("auto", "pallas", "xla", "argsort")
+_HOP_IMPLS = ("auto", "pallas", "xla", "composed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +58,12 @@ class SearchConfig:
                   engine clamps it to ``ef``).
     dist_impl:    distance backend ("auto" | "pallas" | "xla").
     edge_impl:    edge-selection backend (same set plus "argsort").
+    hop_impl:     whole-hop backend ("auto" | "pallas" | "xla" |
+                  "composed"). "pallas"/"xla" run the fused hop (one
+                  launch per beam iteration); "composed" chains the three
+                  dispatched ops, so ``dist_impl``/``edge_impl`` apply
+                  inside it; "auto" = pallas on TPU, composed elsewhere
+                  (``REPRO_HOP_IMPL`` / ``REPRO_IMPL`` override).
     metric:       "l2" | "ip".
     skip_layers:  Algorithm 1's skip-layer rule (improvised search only).
     max_iters:    beam iteration cap; None = the engine's ``4*ef + 32``.
@@ -67,6 +74,7 @@ class SearchConfig:
     expand_width: int = DEFAULT_EXPAND_WIDTH
     dist_impl: str = "auto"
     edge_impl: str = "auto"
+    hop_impl: str = "auto"
     metric: str = "l2"
     skip_layers: bool = True
     max_iters: int | None = None
@@ -89,6 +97,10 @@ class SearchConfig:
         if self.edge_impl not in _EDGE_IMPLS:
             raise ValueError(
                 f"edge_impl {self.edge_impl!r} not in {_EDGE_IMPLS}"
+            )
+        if self.hop_impl not in _HOP_IMPLS:
+            raise ValueError(
+                f"hop_impl {self.hop_impl!r} not in {_HOP_IMPLS}"
             )
         if self.max_iters is not None and int(self.max_iters) < 1:
             raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")

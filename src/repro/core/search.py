@@ -28,6 +28,17 @@ multi-attribute variant. **nbr_fn contract**: it receives the *flattened*
 expansion frontier ``int32[B*W]`` (row ``b*W + w`` is query b's w-th
 expansion, ``-1`` for inactive slots) and must return ``int32[B*W, M]``.
 
+Alternatively a caller may bind the *whole* hop: with ``hop_fn`` given, the
+edge-selection + visited-test-and-set + gather-distance middle of the loop
+body runs as one call (``kernels/ops.py::hop`` — on TPU the fused Pallas
+megakernel, one launch per beam iteration with the frontier resident in
+VMEM). **hop_fn contract**: ``(u int32[B, W], exp_ok bool[B, W],
+visited uint32[B, words]) -> (nbr int32[B, W*M], ndist f32[B, W*M],
+nvalid bool[B, W*M], visited')`` with the same semantics as the composed
+path (``kernels/ref.py::hop``) — integer outputs bit-identical, distances
+f32. The two-list filtered searches keep the composed body (their
+range-filter hook lives between edge selection and the visited update).
+
 Engine knobs arrive as ONE frozen ``core/config.py::SearchConfig`` (a
 static arg of the jitted searches, so equal configs share one compiled
 program — the contract ``serve/executor.py`` builds its compile cache on).
@@ -117,6 +128,8 @@ def beam_search(
     rng: jax.Array | None = None,
     dist_impl: str | None = None,
     edge_impl: str | None = None,
+    hop_impl: str | None = None,
+    hop_fn: Callable | None = None,
 ) -> SearchResult:
     """Generic batched beam search. See module docstring.
 
@@ -138,11 +151,23 @@ def beam_search(
       arrives pre-bound), but the knob lives in the config so every wrapper
       forwards one uniform backend set; concrete searches bind it into
       their ``nbr_fn`` via ``ops.select_edges``.
+    hop_fn: optional whole-hop closure (see module docstring). Mutually
+      exclusive with ``result_filter_fn`` — the two-list searches hook the
+      range filter *between* edge selection and the visited update, which
+      only the composed body exposes.
     """
     config = config_mod.merge(
         config, ef=ef, expand_width=expand_width, max_iters=max_iters,
         metric=metric, dist_impl=dist_impl, edge_impl=edge_impl,
+        hop_impl=hop_impl,
     )
+    if hop_fn is not None and result_filter_fn is not None:
+        raise ValueError(
+            "beam_search: hop_fn is incompatible with result_filter_fn "
+            "(filtered searches need the composed hop body)"
+        )
+    if hop_fn is None and nbr_fn is None:
+        raise ValueError("beam_search: need nbr_fn or hop_fn")
     ef = config.ef
     metric = config.metric
     dist_impl = config.dist_impl
@@ -222,46 +247,53 @@ def beam_search(
         cand_vis = cand_vis.at[rows, slots].max(exp_ok)
         n_hops = n_hops + jnp.sum(exp_ok, axis=1, dtype=jnp.int32)
 
-        # ONE batched edge selection for the whole [B, W] frontier
-        nbr = nbr_fn(u.reshape(B * W))                      # [B*W, M]
-        M = nbr.shape[1]
-        nbr = nbr.reshape(B, W * M)
-        exp_rep = jnp.repeat(exp_ok, M, axis=1)             # [B, W*M]
-        pre_valid = (nbr >= 0) & exp_rep
+        if hop_fn is not None:
+            # whole hop in one call: edge selection + visited test-and-set
+            # + gather-distance (on TPU one fused Pallas launch)
+            nbr, ndist, nvalid, visited = hop_fn(u, exp_ok, visited)
+        else:
+            # ONE batched edge selection for the whole [B, W] frontier
+            nbr = nbr_fn(u.reshape(B * W))                  # [B*W, M]
+            M = nbr.shape[1]
+            nbr = nbr.reshape(B, W * M)
+            exp_rep = jnp.repeat(exp_ok, M, axis=1)         # [B, W*M]
+            pre_valid = (nbr >= 0) & exp_rep
 
-        if two_lists:
-            in_rng = result_filter_fn(jnp.maximum(nbr, 0))
-            if visit_prob_fn is not None:
-                key, sub = jax.random.split(key)
-                p = visit_prob_fn(jnp.maximum(nbr, 0), t)
-                coin = jax.random.uniform(sub, (B, W * M))
-                visit_out = coin < p
-            else:
-                visit_out = jnp.ones((B, W * M), bool)  # post-filtering
-            pre_valid &= in_rng | visit_out
-            # consecutive out-of-range counter follows the expanded nodes
-            u_in = result_filter_fn(jnp.maximum(u, 0)) & exp_ok
-            any_exp = jnp.any(exp_ok, axis=1)
-            num_out = jnp.sum(exp_ok & ~u_in, axis=1, dtype=jnp.int32)
-            t = jnp.where(
-                any_exp,
-                jnp.where(jnp.any(u_in, axis=1), 0, t + num_out),
-                t,
-            )
+            if two_lists:
+                in_rng = result_filter_fn(jnp.maximum(nbr, 0))
+                if visit_prob_fn is not None:
+                    key, sub = jax.random.split(key)
+                    p = visit_prob_fn(jnp.maximum(nbr, 0), t)
+                    coin = jax.random.uniform(sub, (B, W * M))
+                    visit_out = coin < p
+                else:
+                    visit_out = jnp.ones((B, W * M), bool)  # post-filtering
+                pre_valid &= in_rng | visit_out
+                # consecutive out-of-range counter follows the expanded nodes
+                u_in = result_filter_fn(jnp.maximum(u, 0)) & exp_ok
+                any_exp = jnp.any(exp_ok, axis=1)
+                num_out = jnp.sum(exp_ok & ~u_in, axis=1, dtype=jnp.int32)
+                t = jnp.where(
+                    any_exp,
+                    jnp.where(jnp.any(u_in, axis=1), 0, t + num_out),
+                    t,
+                )
 
-        # packed visited: one test_and_set both reads and marks, and dedups
-        # the same neighbor arriving from two expansions in this hop
-        visited, seen = bitset.test_and_set(visited, nbr, pre_valid)
-        nvalid = pre_valid & ~seen
+            # packed visited: one test_and_set both reads and marks, and
+            # dedups the same neighbor arriving from two expansions
+            visited, seen = bitset.test_and_set(visited, nbr, pre_valid)
+            nvalid = pre_valid & ~seen
 
-        # fused gather+distance: no [B, W*M, d] intermediate on TPU
-        ndist = gdist(jnp.where(nvalid, nbr, -1))
+            # fused gather+distance: no [B, W*M, d] intermediate on TPU
+            ndist = gdist(jnp.where(nvalid, nbr, -1))
+
+        WM = nbr.shape[1]
         n_dists = n_dists + jnp.sum(nvalid, axis=1, dtype=jnp.int32)
 
         # merge into navigation list
         all_ids = jnp.concatenate([cand_ids, jnp.where(nvalid, nbr, -1)], 1)
         all_dists = jnp.concatenate([cand_dists, ndist], 1)
-        all_vis = jnp.concatenate([cand_vis, jnp.zeros((B, W * M), bool)], 1)
+        all_vis = jnp.concatenate([cand_vis, jnp.zeros((B, WM), bool)], 1)
         _, idx = jax.lax.top_k(-all_dists, ef)
         cand_ids = jnp.take_along_axis(all_ids, idx, 1)
         cand_dists = jnp.take_along_axis(all_dists, idx, 1)
@@ -336,20 +368,27 @@ def _search_improvised_jit(vectors, nbrs, queries, L, R, *, logn, m_out, k,
     Lw = tile_frontier(L, expand_width)
     Rw = tile_frontier(R, expand_width)
 
-    def nbr_fn(u):
-        return ops.select_edges(
-            nbrs, u, Lw, Rw, logn=logn, m_out=m_out,
-            skip_layers=config.skip_layers, impl=config.edge_impl,
+    # the whole hop dispatches as one unit: config.hop_impl picks the fused
+    # megakernel (pallas/xla) or the composed three-op path, inside which
+    # the per-op edge_impl/dist_impl knobs still apply
+    def hop_fn(u, exp_ok, visited):
+        return ops.hop(
+            queries, vectors, nbrs, u, Lw, Rw, visited, exp_ok,
+            logn=logn, m_out=m_out, skip_layers=config.skip_layers,
+            metric=config.metric, impl=config.hop_impl,
+            edge_impl=config.edge_impl, dist_impl=config.dist_impl,
         )
 
-    return beam_search(vectors, queries, entries, nbr_fn, k=k, config=config)
+    return beam_search(
+        vectors, queries, entries, None, k=k, config=config, hop_fn=hop_fn
+    )
 
 
 def search_improvised(
     vectors, nbrs, queries, L, R, *, logn, m_out, k,
     config: SearchConfig | None = None, ef=None, skip_layers=None,
     metric=None, max_iters=None, expand_width=None, dist_impl=None,
-    edge_impl=None,
+    edge_impl=None, hop_impl=None,
 ):
     """The paper's query path: beam search on the improvised dedicated graph.
 
@@ -364,7 +403,8 @@ def search_improvised(
     config = config_mod.merge(
         config, ef=ef, skip_layers=skip_layers, metric=metric,
         max_iters=max_iters, expand_width=expand_width, dist_impl=dist_impl,
-        edge_impl=edge_impl, _warn_where="search_improvised",
+        edge_impl=edge_impl, hop_impl=hop_impl,
+        _warn_where="search_improvised",
     )
     return _search_improvised_jit(
         vectors, nbrs, queries, L, R, logn=logn, m_out=m_out, k=k,

@@ -9,19 +9,29 @@ cost. Here the packed table ``nbrs[n, layers*m]`` stays un-blocked in
 block into a VMEM scratch (software-pipelined like ``gather_distance.py``,
 ``-1`` frontier slots skipped by predication), computes the
 ``segment_tree.scan_mask`` closed form in-kernel, and replaces the stable
-argsort dedup with a **sort-free equality matrix**: with ``K = layers*m`` a
-strictly-lower-triangular ``[K, K]`` ``id[i] == id[j]`` comparison marks
-non-first occurrences on the VPU, and the priority-ordered top-``m_out``
-falls out of ``m_out`` masked argmin steps — no sort anywhere.
+argsort dedup with a sort-free formulation. Two dedup variants:
+
+  * ``dedup="lazy"`` (default) — O(m_out·K): the priority-ordered
+    top-``m_out`` runs as ``m_out`` masked argmin steps, and each step
+    wipes *every* position holding the id it just selected, so later
+    steps can only surface new ids. No ``[K, K]`` intermediate exists,
+    VMEM stays flat in K. CPU measurements showed ~8.2x vs eager at
+    K=288 (ROADMAP "lazy-vs-eager" decision — resolved in favor of lazy).
+  * ``dedup="eager"`` — the historical **equality matrix**: a
+    strictly-lower-triangular ``[K, K]`` ``id[i] == id[j]`` comparison
+    marks non-first occurrences up front, then the same ``m_out`` argmin
+    steps select. Kept selectable for A/B benchmarking.
 
 Ids match ``kernels/ref.py::select_edges`` (and the historical argsort
-formulation ``core/edge_select.py::select_edges_batch``) bit-for-bit; the
-math is integer-exact, so parity is equality, not tolerance.
+formulation ``core/edge_select.py::select_edges_batch``) bit-for-bit in
+both variants; the math is integer-exact, so parity is equality, not
+tolerance.
 
-VMEM residency per program is dominated by the ``[bf, K, K]`` dedup
-intermediates: at the default ``bf=8`` and K=288 (logn=17, m=16) the masks
-pad to ``8*288*384`` lanes (~3.5 MB as i32); K up to 400 (logn=24, m=16)
-pads to 512 lanes (~6.5 MB), so ``block_f`` auto-drops to 4 above K=384.
+VMEM residency: lazy keeps only the flat ``[bf, K]`` buffers, so the
+default row tile is ``bf=8`` at every K. Eager's ``[bf, K, K]``
+intermediates dominate (at ``bf=8``, K=288 the masks pad to
+``8*288*384`` lanes, ~3.5 MB as i32; K=400 pads to 512 lanes, ~6.5 MB),
+so eager auto-drops ``block_f`` to 4 above K=384 — the cap lazy lifts.
 The gather scratch itself is tiny (``bf*K*4`` bytes). CPU/CI runs use
 ``interpret=True``.
 """
@@ -46,7 +56,7 @@ def _edge_select_kernel(
     o_ref,       # VMEM [bf, m_out]
     xbuf,        # VMEM scratch [bf, K] gathered edge blocks
     sems,        # DMA semaphores [window]
-    *, bf, K, m, logn, m_out, skip_layers, window,
+    *, bf, K, m, logn, m_out, skip_layers, window, dedup,
 ):
     big = jnp.int32(2**30)
 
@@ -97,15 +107,18 @@ def _edge_select_kernel(
         flat, us, L, R, lay, logn=logn, skip_layers=skip_layers
     )
 
-    # -- sort-free dedup: strictly-lower-triangular equality matrix ---------
-    pos_i = jax.lax.broadcasted_iota(jnp.int32, (bf, K, K), 1)
-    pos_j = jax.lax.broadcasted_iota(jnp.int32, (bf, K, K), 2)
-    eq = (flat[:, :, None] == flat[:, None, :]) & valid[:, None, :]
-    dup = jnp.any(eq & (pos_j < pos_i), axis=2)           # [bf, K]
-
     # priority == flat position (upper layer first, then slot order)
     pos = jax.lax.broadcasted_iota(jnp.int32, (bf, K), 1)
-    prio = jnp.where(valid & ~dup, pos, big)
+    if dedup == "eager":
+        # strictly-lower-triangular equality matrix marks non-first
+        # occurrences up front (the [bf, K, K] VMEM hog)
+        pos_i = jax.lax.broadcasted_iota(jnp.int32, (bf, K, K), 1)
+        pos_j = jax.lax.broadcasted_iota(jnp.int32, (bf, K, K), 2)
+        eq = (flat[:, :, None] == flat[:, None, :]) & valid[:, None, :]
+        dup = jnp.any(eq & (pos_j < pos_i), axis=2)       # [bf, K]
+        prio = jnp.where(valid & ~dup, pos, big)
+    else:
+        prio = jnp.where(valid, pos, big)
 
     # -- priority-ordered top-m_out: m_out masked argmin steps --------------
     outs = []
@@ -116,34 +129,54 @@ def _edge_select_kernel(
             jnp.where(sel, flat, jnp.iinfo(jnp.int32).min),
             axis=1, keepdims=True,
         )
-        outs.append(jnp.where(pmin < big, idt, jnp.int32(-1)))
-        prio = jnp.where(sel, big, prio)
+        out_t = jnp.where(pmin < big, idt, jnp.int32(-1))
+        outs.append(out_t)
+        if dedup == "eager":
+            prio = jnp.where(sel, big, prio)
+        else:
+            # lazy: wipe every position holding the selected id so later
+            # steps can only surface new ids — O(m_out*K), no [K, K]
+            taken = (flat == out_t) & (prio < big)
+            prio = jnp.where(sel | taken, big, prio)
     o_ref[...] = jnp.concatenate(outs, axis=1)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("logn", "m_out", "skip_layers", "block_f", "window",
-                     "interpret"),
+                     "dedup", "interpret"),
 )
 def edge_select_kernel_call(
     nbrs, us, L, R, *, logn, m_out, skip_layers=True, block_f=None,
-    window=8, interpret=False,
+    window=8, dedup="lazy", interpret=False,
 ):
     """nbrs int32[n, layers, m], us int32[F] (-1 masked), L/R scalars or
     int32[F] -> int32[F, m_out] improvised edges, -1 padded.
 
     Pads F to the ``block_f`` row-tile multiple internally; the table is
     passed flattened ``[n, layers*m]`` so each frontier node is one
-    contiguous row DMA.
+    contiguous row DMA. ``dedup`` picks "lazy" (default, O(m_out*K)) or
+    "eager" (the [K, K] equality matrix, kept for A/B) — bit-identical ids.
     """
+    if dedup not in ("lazy", "eager"):
+        raise ValueError(
+            f"edge_select: unknown dedup {dedup!r} "
+            "(expected 'lazy' or 'eager')"
+        )
     n, layers, m = nbrs.shape
     K = layers * m
     F = us.shape[0]
     us = us.astype(jnp.int32)
     L = jnp.broadcast_to(jnp.asarray(L, jnp.int32), us.shape)
     R = jnp.broadcast_to(jnp.asarray(R, jnp.int32), us.shape)
-    bf = block_f if block_f is not None else (8 if K <= 384 else 4)
+    # lazy dedup has no [bf, K, K] intermediate, so the row tile no longer
+    # shrinks above K=384
+    if block_f is not None:
+        bf = block_f
+    elif dedup == "lazy":
+        bf = 8
+    else:
+        bf = 8 if K <= 384 else 4
 
     meta = jnp.stack(
         [us, L, R, jnp.zeros_like(us)], axis=1
@@ -158,7 +191,7 @@ def edge_select_kernel_call(
     out = pl.pallas_call(
         functools.partial(
             _edge_select_kernel, bf=bf, K=K, m=m, logn=logn, m_out=m_out,
-            skip_layers=skip_layers, window=min(window, bf),
+            skip_layers=skip_layers, window=min(window, bf), dedup=dedup,
         ),
         grid=grid,
         in_specs=[

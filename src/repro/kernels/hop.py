@@ -1,0 +1,306 @@
+"""Pallas TPU megakernel: one whole beam-search hop in a single launch.
+
+Each beam-search iteration used to be three kernel launches — edge
+selection (``kernels/edge_select.py``), the packed-bitset visited update
+(``core/bitset.py``), and gather-distance (``kernels/gather_distance.py``)
+— with the frontier round-tripping through HBM between them: the improvised
+edges land in HBM, get re-read by the bitset scatter, and the surviving ids
+get re-read again to drive the vector gather. This kernel fuses the whole
+hop so the frontier never leaves VMEM:
+
+  1. **edge gather** — per ``(bb)`` query tile the packed neighbor table
+     stays un-blocked in ``ANY``/HBM space and the kernel row-DMAs each of
+     the ``bb*W`` frontier nodes' ``K = (logn+1)*m`` edge blocks into a
+     VMEM scratch (software-pipelined, up to ``window`` copies in flight,
+     ``-1`` frontier slots skipped by predication);
+  2. **edge selection** — the ``segment_tree.scan_mask`` closed form
+     (``ref.edge_scan_valid``) plus the *lazy* O(m_out·K) dedup: ``m_out``
+     masked-argmin steps, each wiping every position holding the id it just
+     selected — no ``[K, K]`` equality matrix, so VMEM stays flat in K;
+  3. **visited test-and-set** — the query tile's ``uint32[bb, words]``
+     bitset rows live in VMEM for the whole launch; membership is
+     shift/mask arithmetic, in-row dedup is the same strictly-earlier
+     equality mask as ``core/bitset.py``, and the updated rows are written
+     back once at the end (single-bit masks scatter-add, exact OR after
+     dedup);
+  4. **vector gather + distance** — the surviving (newly-visited) ids DMA
+     their vector rows straight from the un-blocked table into a VMEM
+     scratch and one MXU matmul emits masked f32 distances, exactly the
+     ``gather_distance.py`` structure.
+
+Semantics are ``kernels/ref.py::hop`` (select_edges -> bitset.test_and_set
+-> gather_dist): integer outputs (edges, newly-visited mask, bitset words)
+must match bit-for-bit, distances to f32 tolerance.
+
+VMEM residency per program: the vector scratch ``bb*W*m_out*d_pad`` rows
+dominate (defaults bb=4, W=4, m_out=16, d=128: 128 KB f32), plus the edge
+scratch ``bb*W*K*4`` bytes and the bitset tile ``bb*ceil(n/32)*4`` bytes —
+the bitset tile grows with n, so the autotuner (``kernels/autotune.py``)
+drops ``block_b`` for very large n. CPU/CI runs use ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as _ref
+
+__all__ = ["hop_kernel_call"]
+
+# plain Python ints so the kernel body inlines them as literals (Pallas
+# rejects closure-captured traced constants)
+_BIG = 2**30
+_IMIN = -(2**31)
+
+
+def _hop_kernel(
+    meta_smem,   # SMEM [bb, 4*W] (u | L | R | exp) — DMA row indices
+    meta_vmem,   # VMEM [bb, 4*W] (vectorized u/L/R/exp)
+    q_ref,       # VMEM [bb, dp]
+    vis_ref,     # VMEM [bb, words] (query tile's bitset rows)
+    nbrs_ref,    # ANY  [n, K]  (packed edge table, never blocked)
+    table_ref,   # ANY  [n, dp] (vector table, never blocked)
+    nbr_out,     # VMEM [bb, W*m_out] int32
+    dist_out,    # VMEM [bb, W*m_out] f32
+    nvalid_out,  # VMEM [bb, W*m_out] int32 (0/1)
+    vis_out,     # VMEM [bb, words] uint32
+    ebuf,        # VMEM scratch [bb*W, K] int32 gathered edge blocks
+    xbuf,        # VMEM scratch [bb*W*m_out, dp] gathered vector rows
+    sems,        # DMA semaphores [window]
+    *, bb, W, K, m, m_out, logn, skip_layers, metric, window,
+):
+    WM = W * m_out
+    F = bb * W
+
+    # -- 1. pipelined edge-block gather (one row DMA per frontier node) -----
+    def edge_u(t):
+        return meta_smem[t // W, t % W]
+
+    def edge_copy(t):
+        return pltpu.make_async_copy(
+            nbrs_ref.at[edge_u(t)], ebuf.at[t], sems.at[t % window]
+        )
+
+    def edge_fill(t, carry):
+        @pl.when(t >= window)
+        def _():
+            @pl.when(edge_u(t - window) >= 0)
+            def _():
+                edge_copy(t - window).wait()
+
+        @pl.when(edge_u(t) >= 0)
+        def _():
+            edge_copy(t).start()
+
+        return carry
+
+    jax.lax.fori_loop(0, F, edge_fill, 0)
+
+    def edge_drain(t, carry):
+        @pl.when(edge_u(t) >= 0)
+        def _():
+            edge_copy(t).wait()
+
+        return carry
+
+    jax.lax.fori_loop(max(0, F - window), F, edge_drain, 0)
+
+    # -- 2. edge selection: scan-mask validity + lazy O(m_out*K) dedup ------
+    us = meta_vmem[:, 0 * W:1 * W].reshape(F, 1)
+    L = meta_vmem[:, 1 * W:2 * W].reshape(F, 1)
+    R = meta_vmem[:, 2 * W:3 * W].reshape(F, 1)
+    exp_ok = meta_vmem[:, 3 * W:4 * W] != 0               # [bb, W]
+    flat = ebuf[...]                                      # [F, K]
+
+    lay = jax.lax.broadcasted_iota(jnp.int32, (F, K), 1) // m
+    valid = _ref.edge_scan_valid(
+        flat, us, L, R, lay, logn=logn, skip_layers=skip_layers
+    )
+
+    # priority == flat position (upper layer first, then slot order); the
+    # lazy dedup wipes every position holding a selected id, so later steps
+    # can only surface new ids — bit-identical to the eager [K, K] matrix
+    pos = jax.lax.broadcasted_iota(jnp.int32, (F, K), 1)
+    prio = jnp.where(valid, pos, _BIG)
+    outs = []
+    for _ in range(m_out):
+        pmin = jnp.min(prio, axis=1, keepdims=True)       # [F, 1]
+        sel = prio == pmin
+        idt = jnp.max(jnp.where(sel, flat, _IMIN), axis=1, keepdims=True)
+        out_t = jnp.where(pmin < _BIG, idt, jnp.int32(-1))
+        outs.append(out_t)
+        taken = (flat == out_t) & (prio < _BIG)
+        prio = jnp.where(sel | taken, _BIG, prio)
+    edges = jnp.concatenate(outs, axis=1).reshape(bb, WM)
+    nbr_out[...] = edges
+
+    # -- 3. visited test-and-set, bitset rows resident in VMEM --------------
+    pre_valid = edges >= 0
+    pre_valid &= jnp.repeat(exp_ok, m_out, axis=1)        # [bb, WM]
+    safe = jnp.maximum(edges, 0)
+    word_idx = safe >> 5
+    shift = (safe & 31).astype(jnp.uint32)
+    vis = vis_ref[...]                                    # [bb, words]
+    word = jnp.take_along_axis(vis, word_idx, axis=1)
+    seen = ((word >> shift) & jnp.uint32(1)) == 1
+    seen &= pre_valid
+    # first occurrence wins within a row (same id from two expansions)
+    j_pos = jax.lax.broadcasted_iota(jnp.int32, (bb, WM, WM), 1)
+    i_pos = jax.lax.broadcasted_iota(jnp.int32, (bb, WM, WM), 2)
+    eq = (safe[:, :, None] == safe[:, None, :]) \
+        & pre_valid[:, :, None] & pre_valid[:, None, :]
+    dup = jnp.any(eq & (i_pos < j_pos), axis=2)           # [bb, WM]
+    new = pre_valid & ~seen & ~dup
+    nvalid = pre_valid & ~(seen | dup)
+    # single-bit masks are unique (row, word, bit) after dedup: add == OR
+    mask = jnp.where(new, jnp.uint32(1) << shift, jnp.uint32(0))
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bb, WM), 0)
+    vis_out[...] = vis.at[rows, word_idx].add(mask)
+    nvalid_out[...] = nvalid.astype(jnp.int32)
+
+    # -- 4. pipelined vector gather for the newly-visited ids ---------------
+    gids = jnp.where(nvalid, edges, -1).reshape(bb * WM)
+
+    def vec_id(t):
+        return gids[t]
+
+    def vec_copy(t):
+        return pltpu.make_async_copy(
+            table_ref.at[vec_id(t)], xbuf.at[t], sems.at[t % window]
+        )
+
+    def vec_fill(t, carry):
+        @pl.when(t >= window)
+        def _():
+            @pl.when(vec_id(t - window) >= 0)
+            def _():
+                vec_copy(t - window).wait()
+
+        @pl.when(vec_id(t) >= 0)
+        def _():
+            vec_copy(t).start()
+
+        return carry
+
+    jax.lax.fori_loop(0, bb * WM, vec_fill, 0)
+
+    def vec_drain(t, carry):
+        @pl.when(vec_id(t) >= 0)
+        def _():
+            vec_copy(t).wait()
+
+        return carry
+
+    jax.lax.fori_loop(max(0, bb * WM - window), bb * WM, vec_drain, 0)
+
+    # -- distance: one MXU pass, keep the diagonal query<->row pairing ------
+    q = q_ref[...].astype(jnp.float32)                    # [bb, dp]
+    x = xbuf[...].astype(jnp.float32)                     # [bb*WM, dp]
+    dots = jax.lax.dot_general(
+        x, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).reshape(bb, WM, bb)
+    row_q = jax.lax.broadcasted_iota(jnp.int32, (bb, WM, bb), 0)
+    col_q = jax.lax.broadcasted_iota(jnp.int32, (bb, WM, bb), 2)
+    dot = jnp.sum(jnp.where(row_q == col_q, dots, 0.0), axis=2)  # [bb, WM]
+    if metric == "ip":
+        out = -dot
+    else:
+        xx = jnp.sum(x * x, axis=1).reshape(bb, WM)
+        qq = jnp.sum(q * q, axis=1)
+        out = xx - 2.0 * dot + qq[:, None]
+    dist_out[...] = jnp.where(nvalid, out, jnp.inf)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("logn", "m_out", "skip_layers", "metric", "block_b",
+                     "window", "interpret"),
+)
+def hop_kernel_call(
+    q, table, nbrs, u, L, R, visited, exp_ok, *, logn, m_out,
+    skip_layers=True, metric="l2", block_b=4, window=8, interpret=False,
+):
+    """One fused whole-hop launch. See ``kernels/ref.py::hop`` for the
+    semantic contract and shapes: q f32[B, d], table [n, d], nbrs
+    int32[n, layers, m] (pre-decoded), u int32[B, W], L/R int32[B*W],
+    visited uint32[B, words], exp_ok bool[B, W]. Returns
+    ``(nbr, ndist, nvalid, visited')``.
+
+    Pads B to the ``block_b`` tile multiple and d to the 128 lane width
+    internally (zero columns are exact for both metrics); the edge and
+    vector tables pass flattened/un-blocked so every gather is one
+    contiguous row DMA.
+    """
+    B, d = q.shape
+    n, layers, m = nbrs.shape
+    K = layers * m
+    W = u.shape[1]
+    words = visited.shape[1]
+    bb = max(1, min(block_b, B))
+
+    def pad_to(a, mult, axis, value=0):
+        r = (-a.shape[axis]) % mult
+        if r == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(a, widths, constant_values=value)
+
+    meta = jnp.concatenate(
+        [
+            u.astype(jnp.int32),
+            L.astype(jnp.int32).reshape(B, W),
+            R.astype(jnp.int32).reshape(B, W),
+            exp_ok.astype(jnp.int32),
+        ],
+        axis=1,
+    )                                                     # [B, 4W]
+    meta = pad_to(meta, bb, 0, value=-1)
+    qp = pad_to(pad_to(q, bb, 0), 128, 1)
+    tp = pad_to(table, 128, 1)
+    vp = pad_to(visited, bb, 0)
+    dp = qp.shape[1]
+    Bp = meta.shape[0]
+    grid = (Bp // bb,)
+    WM = W * m_out
+    win = max(1, min(window, bb * W))
+
+    nbr, dist, nvalid, vis = pl.pallas_call(
+        functools.partial(
+            _hop_kernel, bb=bb, W=W, K=K, m=m, m_out=m_out, logn=logn,
+            skip_layers=skip_layers, metric=metric, window=win,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 4 * W), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bb, 4 * W), lambda i: (i, 0)),
+            pl.BlockSpec((bb, dp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, words), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, WM), lambda i: (i, 0)),
+            pl.BlockSpec((bb, WM), lambda i: (i, 0)),
+            pl.BlockSpec((bb, WM), lambda i: (i, 0)),
+            pl.BlockSpec((bb, words), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, WM), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, WM), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, WM), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, words), jnp.uint32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb * W, K), jnp.int32),
+            pltpu.VMEM((bb * WM, dp), table.dtype),
+            pltpu.SemaphoreType.DMA((win,)),
+        ],
+        interpret=interpret,
+    )(meta, meta, qp, vp, nbrs.reshape(n, K), tp)
+    return nbr[:B], dist[:B], nvalid[:B] != 0, vis[:B]

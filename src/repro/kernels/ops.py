@@ -17,11 +17,27 @@ for the pure-XLA reference instead. ``impl`` selection:
   * "legacy"    — construction prune only: the historical eager path
                   (``core/rng.py::prune_batch``, full [C, C] matrix), kept
                   as the bit-identical oracle and benchmark baseline
+  * "composed"  — whole hop only: the three-op composition (select_edges
+                  -> bitset.test_and_set -> gather_dist), kept as the
+                  bit-identical oracle; the per-op ``edge_impl`` /
+                  ``dist_impl`` knobs apply inside it. ``hop``'s "auto"
+                  resolves to "composed" off-TPU (not "xla") so the per-op
+                  knobs keep meaning something; any global ``REPRO_IMPL``
+                  (including "legacy") resolves it the same way — only
+                  ``REPRO_HOP_IMPL`` or TPU auto engages the megakernel —
+                  and explicit per-op pins force it regardless of impl.
 
 ``select_edges`` is integer-exact: all three backends return bit-identical
 ids. ``prune`` backends agree bit-identically in kept ids (keep decisions
 compare f32 distances built from the same expansion). ``gather_dist``
 backends agree to f32 tolerance (and bit-exactly under identical fusion).
+``hop`` is integer-exact in (edges, newly-visited mask, bitset words)
+across all three backends; distances agree to f32 tolerance.
+
+Pallas branches merge the autotuner's installed picks
+(``kernels/autotune.py::get_pick``) underneath any explicit ``**block_kw``,
+so a measured block-size/pipeline-depth choice applies process-wide while
+caller overrides still win.
 """
 from __future__ import annotations
 
@@ -31,18 +47,21 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitset as _bitset
 from repro.core import edge_select as _legacy_edge_select
 from repro.core import rng as _legacy_rng
 from repro.core import storage as _storage
+from repro.kernels import autotune as _autotune
 from repro.kernels import distance as _distance
 from repro.kernels import edge_select as _edge_select
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gather_distance as _gather
+from repro.kernels import hop as _hop
 from repro.kernels import prune as _prune
 from repro.kernels import ref as _ref
 
 __all__ = [
-    "pairwise_dist", "gather_dist", "select_edges", "prune",
+    "pairwise_dist", "gather_dist", "select_edges", "prune", "hop",
     "flash_attention", "default_impl",
 ]
 
@@ -101,7 +120,8 @@ def gather_dist(q, table, ids, *, metric="l2", impl="auto", **block_kw):
     if impl == "xla":
         return _ref.gather_dist(q, table, ids, metric=metric)
     return _gather.gather_distance_kernel_call(
-        q, table, ids, metric=metric, interpret=_interpret(), **block_kw
+        q, table, ids, metric=metric, interpret=_interpret(),
+        **{**_autotune.get_pick("gather_dist"), **block_kw},
     )
 
 
@@ -131,7 +151,8 @@ def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True,
         )
     return _edge_select.edge_select_kernel_call(
         nbrs, us, L, R, logn=logn, m_out=m_out, skip_layers=skip_layers,
-        interpret=_interpret(), **block_kw
+        interpret=_interpret(),
+        **{**_autotune.get_pick("edge_select"), **block_kw},
     )
 
 
@@ -189,7 +210,101 @@ def prune(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True,
         )
     return _prune.prune_kernel_call(
         cand_ids, cand_dists, table, m=m, alpha=float(alpha), fill=fill,
-        interpret=_interpret(), **block_kw
+        interpret=_interpret(),
+        **{**_autotune.get_pick("prune"), **block_kw},
+    )
+
+
+def hop(q, table, nbrs, u, L, R, visited, exp_ok, *, logn, m_out,
+        skip_layers=True, metric="l2", impl="auto", edge_impl="auto",
+        dist_impl="auto", **block_kw):
+    """One whole beam-search hop: edge improvisation + visited test-and-set
+    + gather-distance, the full ``beam_search`` iteration body.
+
+    "pallas" runs the fused megakernel (``kernels/hop.py``) — one launch,
+    frontier resident in VMEM; "xla" is the jnp composition
+    (``ref.hop``); "composed" chains the three *dispatched* ops
+    (``select_edges`` -> ``bitset.test_and_set`` -> ``gather_dist``), so
+    the per-op ``edge_impl`` / ``dist_impl`` knobs apply — it is the
+    bit-identical oracle and the pre-fusion production path. "auto" picks
+    pallas on TPU and "composed" off-TPU (keeping per-op knobs live);
+    ``REPRO_HOP_IMPL`` overrides that choice. The global ``REPRO_IMPL``
+    resolves "auto" to "composed" (its job is forcing the *per-op*
+    kernels, which run inside the composition; "legacy" maps the same
+    way) — only ``REPRO_HOP_IMPL`` or TPU auto engages the megakernel.
+    An explicit non-"auto" ``edge_impl``/``dist_impl`` pin always wins:
+    it routes any resolved impl through "composed", since the fused
+    kernel has no per-op backends. Integer outputs
+    (nbr, nvalid, visited) are bit-identical across backends; distances
+    agree to f32 tolerance.
+
+    Shapes: q f32[B, d], table [n, d], nbrs [n, layers, m] (compact int16
+    decodes here), u int32[B, W], L/R int32[B*W], visited uint32[B, words],
+    exp_ok bool[B, W] -> (nbr i32[B, W*m_out], ndist f32[B, W*m_out],
+    nvalid bool[B, W*m_out], visited' uint32[B, words]).
+    """
+    if impl == "auto":
+        forced = os.environ.get("REPRO_HOP_IMPL")
+        glob = os.environ.get("REPRO_IMPL")
+        if forced:
+            impl = forced
+        elif glob == "legacy":
+            impl = "legacy"
+        elif glob:
+            # the global override targets the *per-op* kernels: keep the hop
+            # composed so each inner op's auto resolves to the forced
+            # backend — only REPRO_HOP_IMPL (or TPU auto) engages the fused
+            # megakernel, so e.g. the REPRO_IMPL=pallas CI leg still runs
+            # the per-op interpreted kernels, not an interpreted whole-hop
+            # inside every deadline-sensitive serving test
+            impl = "composed"
+        else:
+            # off-TPU auto stays "composed" (not "xla") so the per-op
+            # edge_impl/dist_impl knobs keep applying inside the hop
+            impl = "pallas" if jax.default_backend() == "tpu" else "composed"
+    if impl == "legacy":
+        # global REPRO_IMPL=legacy (prune-only token) falls back to the
+        # composed path rather than erroring the whole hop; the inner ops
+        # would reject the token too, so their autos resolve backend-default
+        impl = "composed"
+        inner = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if edge_impl == "auto":
+            edge_impl = inner
+        if dist_impl == "auto":
+            dist_impl = inner
+    _check_impl("hop", impl, {"pallas", "xla", "composed"})
+    if impl != "composed" and not (edge_impl == "auto"
+                                   and dist_impl == "auto"):
+        # an explicit per-op pin always wins — neither the megakernel nor
+        # the jnp composition has per-op backends, so a caller that pinned
+        # edge_impl/dist_impl (e.g. dist_impl="xla" for per-backend
+        # bit-exactness) routes through the composed path even when
+        # REPRO_HOP_IMPL forces "pallas"
+        impl = "composed"
+    nbrs = _storage.decode_neighbors(nbrs)
+    if impl == "composed":
+        B, W = u.shape
+        nbr = select_edges(
+            nbrs, u.reshape(B * W), L, R, logn=logn, m_out=m_out,
+            skip_layers=skip_layers, impl=edge_impl,
+        ).reshape(B, W * m_out)
+        pre_valid = (nbr >= 0) & jnp.repeat(exp_ok, m_out, axis=1)
+        visited, seen = _bitset.test_and_set(visited, nbr, pre_valid)
+        nvalid = pre_valid & ~seen
+        ndist = gather_dist(
+            q, table, jnp.where(nvalid, nbr, -1), metric=metric,
+            impl=dist_impl,
+        )
+        return nbr, ndist, nvalid, visited
+    if impl == "xla":
+        return _ref.hop(
+            q, table, nbrs, u, L, R, visited, exp_ok, logn=logn,
+            m_out=m_out, skip_layers=skip_layers, metric=metric,
+        )
+    return _hop.hop_kernel_call(
+        q, table, nbrs, u, L, R, visited, exp_ok, logn=logn, m_out=m_out,
+        skip_layers=skip_layers, metric=metric, interpret=_interpret(),
+        **{**_autotune.get_pick("hop"), **block_kw},
     )
 
 

@@ -8,11 +8,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitset as _bitset
 from repro.core import segment_tree
 
 __all__ = [
     "pairwise_dist", "gather_dist", "select_edges", "edge_scan_valid",
-    "prune", "prune_vecs", "attention",
+    "hop", "prune", "prune_vecs", "attention",
 ]
 
 # plain int: safe to reference from inside any trace
@@ -151,6 +152,44 @@ def select_edges(nbrs, us, L, R, *, logn, m_out, skip_layers=True):
 
     _, outs = jax.lax.scan(step, prio, None, length=m_out)
     return outs.T                                         # [F, m_out]
+
+
+def hop(q, table, nbrs, u, L, R, visited, exp_ok, *, logn, m_out,
+        skip_layers=True, metric="l2"):
+    """One whole beam-search hop (the megakernel's semantic contract).
+
+    Fuses the three per-iteration pieces of ``core/search.py::beam_search``'s
+    loop body into one function: edge improvisation for the flattened
+    ``[B*W]`` frontier (:func:`select_edges`), the packed-uint32 visited
+    test-and-set (``core/bitset.py``), and the masked gather-distance
+    (:func:`gather_dist`). Applying the three pieces in this order IS the
+    definition — the composed dispatch path in ``kernels/ops.py::hop`` and
+    the Pallas megakernel must both match it: integer outputs (edges, the
+    newly-visited mask, the updated bitset) bit-identically, distances to
+    f32 tolerance (bit-exactly under identical fusion).
+
+    q f32[B, d]; table [n, d] (f32/bf16); nbrs int32[n, layers, m]
+    (pre-decoded); u int32[B, W] expansion frontier (-1 inactive);
+    L/R int32[B*W] per-frontier-row ranges; visited uint32[B, words];
+    exp_ok bool[B, W] which expansions are live.
+
+    Returns ``(nbr, ndist, nvalid, visited')``:
+      nbr    int32[B, W*m_out]  improvised edges (-1 padded),
+      ndist  f32[B, W*m_out]    distances, +inf where not newly visited,
+      nvalid bool[B, W*m_out]   newly-visited mask (exactly-once per id),
+      visited' uint32[B, words] bitset with the new ids marked.
+    """
+    B, W = u.shape
+    nbr = select_edges(
+        nbrs, u.reshape(B * W), L, R, logn=logn, m_out=m_out,
+        skip_layers=skip_layers,
+    ).reshape(B, W * m_out)
+    exp_rep = jnp.repeat(exp_ok, m_out, axis=1)           # [B, W*m_out]
+    pre_valid = (nbr >= 0) & exp_rep
+    visited, seen = _bitset.test_and_set(visited, nbr, pre_valid)
+    nvalid = pre_valid & ~seen
+    ndist = gather_dist(q, table, jnp.where(nvalid, nbr, -1), metric=metric)
+    return nbr, ndist, nvalid, visited
 
 
 def prune(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True):

@@ -141,19 +141,27 @@ def _dispatch_calls():
     cand = jnp.asarray(rng.integers(0, 16, (2, 6)).astype(np.int32))
     aq, ak, av = (jnp.asarray(rng.standard_normal((1, 2, 8, 4)), jnp.float32)
                   for _ in range(3))
+    from repro.core import bitset
+
+    vis = bitset.make(2, 16)
+    exp = jnp.ones((2, 1), bool)
     return {
         "pairwise_dist": lambda impl: ops.pairwise_dist(q, x, impl=impl),
         "gather_dist": lambda impl: ops.gather_dist(q, x, ids, impl=impl),
         "select_edges": lambda impl: ops.select_edges(
             nbrs, us, L, R, logn=4, m_out=4, impl=impl),
         "prune": lambda impl: ops.prune(cand, du, x, m=4, impl=impl),
+        "hop": lambda impl: ops.hop(
+            q, x, nbrs, us[:, None], L, R, vis, exp, logn=4, m_out=4,
+            impl=impl),
         "flash_attention": lambda impl: ops.flash_attention(
             aq, ak, av, impl=impl),
     }
 
 
 @pytest.mark.parametrize("op", ["pairwise_dist", "gather_dist",
-                                "select_edges", "prune", "flash_attention"])
+                                "select_edges", "prune", "hop",
+                                "flash_attention"])
 def test_unknown_impl_token_rejected(op):
     with pytest.raises(ValueError, match=f"{op}: unknown impl"):
         _dispatch_calls()[op]("bogus")
