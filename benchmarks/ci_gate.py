@@ -15,7 +15,13 @@ records (``BENCH_hotpath.json``, ``BENCH_build.json``,
     backend-parity check reported a divergence, the compact-storage
     section regressed — footprint ratio above ``--max-footprint-ratio``
     (default 0.55), |recall@10 delta| above ``--max-recall-delta``
-    (default 0.01), or neighbor-codec ids not bit-identical — or the
+    (default 0.01), or neighbor-codec ids not bit-identical — a quantized
+    codec regressed (``_check_codecs``: int8 total ratio above
+    ``--max-int8-ratio`` 0.35, PQ navigation ratio above
+    ``--max-pq-nav-ratio`` 0.30 or total above ``--max-pq-total-ratio``
+    0.40, |rerank recall@10 delta| above ``--max-recall-delta`` — checked
+    on the committed full record AND the smoke run, the latter against the
+    looser ``--max-smoke-recall-delta``) — or the
     executor compile gate tripped: any post-warmup compile, or more
     compiled programs than the declared ``configs x batch_buckets x
     k_buckets`` grid — or the serving SLO record shows lost requests or
@@ -143,9 +149,73 @@ def _check_storage(smoke, name, args, errors):
     if sf.get("neighbor_codec_ids_identical") is not True:
         errors.append(
             f"{name}: int16/int32 neighbor codecs returned different ids")
+    if "neighbor_codec_ids_identical_split" in sf \
+            and sf.get("neighbor_codec_ids_identical_split") is not True:
+        errors.append(
+            f"{name}: split/int32 neighbor codecs returned different ids")
 
 
-_AUTOTUNE_KINDS = ("hop", "gather_dist", "edge_select", "prune")
+def _check_codecs(doc, name, args, errors):
+    """Quantized-codec gate (DESIGN.md §9): deterministic, hard.
+
+    int8 must hold total footprint <= ``--max-int8-ratio`` (0.35); PQ must
+    hold the *navigation* footprint (vectors + neighbors + attrs, what the
+    hot path touches) <= ``--max-pq-nav-ratio`` (0.30) and the total
+    including its rerank sidecar <= ``--max-pq-total-ratio`` (0.40). Both
+    must keep |recall@10 delta| (with rerank) <= ``--max-recall-delta``.
+    Applied to the committed full record AND the fresh smoke run — the
+    ratios are arithmetic over dtypes and the recall config is pinned, so
+    runner noise cannot move them. Exception: the recall-delta cap on
+    *smoke* records is ``--max-smoke-recall-delta`` (0.05) rather than
+    the full-bench 0.01 — the smoke workload is 16 queries (recall
+    quantum 1/160) on a tiny max-recall dataset, so the tight cap is not
+    measurable there; the loose one still trips when the rerank wiring
+    breaks (PQ without rerank sits ~0.28 below baseline).
+    """
+    sf = doc.get("storage_footprint")
+    if not isinstance(sf, dict):
+        return  # section-missing already reported for the smoke artifact
+    checks = [
+        ("int8", "footprint_ratio", args.max_int8_ratio),
+        ("pq", "nav_footprint_ratio", args.max_pq_nav_ratio),
+        ("pq", "footprint_ratio", args.max_pq_total_ratio),
+    ]
+    for tag, key, cap in checks:
+        leg = sf.get(tag)
+        if not isinstance(leg, dict):
+            errors.append(f"{name}: storage_footprint.{tag} leg missing")
+            continue
+        v = leg.get(key)
+        if not isinstance(v, (int, float)) or not math.isfinite(v):
+            errors.append(f"{name}: {tag}.{key} = {v!r} not finite")
+        elif v > cap:
+            errors.append(
+                f"{name}: {tag} {key} {v:.3f} exceeds {cap} (the codec "
+                "stopped paying for itself)")
+        else:
+            print(f"ok: {name} {tag} {key} {v:.3f} <= {cap}")
+    recall_cap = (args.max_smoke_recall_delta if doc.get("smoke")
+                  else args.max_recall_delta)
+    for tag in ("int8", "pq"):
+        leg = sf.get(tag)
+        if not isinstance(leg, dict):
+            continue
+        delta = leg.get("recall_delta")
+        if not isinstance(delta, (int, float)) or not math.isfinite(delta):
+            errors.append(f"{name}: {tag}.recall_delta = {delta!r} "
+                          "not finite")
+        elif abs(delta) > recall_cap:
+            errors.append(
+                f"{name}: {tag} recall@10 delta {delta:+.4f} exceeds "
+                f"±{recall_cap} (rerank stopped holding the "
+                "recall floor)")
+        else:
+            print(f"ok: {name} {tag} recall delta {delta:+.4f} "
+                  f"<= ±{recall_cap}")
+
+
+_AUTOTUNE_KINDS = ("hop", "gather_dist", "gather_dist_codec",
+                   "edge_select", "prune")
 
 
 def _check_autotune(smoke, committed, name, errors, warnings):
@@ -309,6 +379,20 @@ def main(argv=None):
     ap.add_argument("--max-recall-delta", type=float, default=0.01,
                     help="max |recall@10 drift| under compact storage "
                          "(hard fail)")
+    ap.add_argument("--max-int8-ratio", type=float, default=0.35,
+                    help="max int8/f32 total footprint ratio (hard fail)")
+    ap.add_argument("--max-pq-nav-ratio", type=float, default=0.30,
+                    help="max PQ/f32 navigation footprint ratio — vectors "
+                         "+ neighbors + attrs, no rerank sidecar "
+                         "(hard fail)")
+    ap.add_argument("--max-pq-total-ratio", type=float, default=0.40,
+                    help="max PQ/f32 total footprint ratio incl. the "
+                         "rerank sidecar (hard fail)")
+    ap.add_argument("--max-smoke-recall-delta", type=float, default=0.05,
+                    help="codec recall-delta cap applied to smoke records "
+                         "(16-query workload: the full-bench 0.01 is below "
+                         "the smoke recall quantum; this still trips when "
+                         "the rerank wiring breaks)")
     ap.add_argument("--slo-p99-tolerance", type=float, default=1.0,
                     help="max relative nominal-p99 regression vs smoke_ref "
                          "before warning (latency on shared runners is very "
@@ -331,6 +415,8 @@ def main(argv=None):
             errors.append(f"{smoke_name}: backend parity check failed")
         if smoke_name == "BENCH_hotpath_smoke.json":
             _check_storage(smoke, smoke_name, args, errors)
+            _check_codecs(smoke, smoke_name, args, errors)
+            _check_codecs(committed, committed_name, args, errors)
             _check_serve(smoke, smoke_name, errors)
             _check_autotune(smoke, committed, smoke_name, errors, warnings)
         if smoke_name == "BENCH_serve_slo_smoke.json":

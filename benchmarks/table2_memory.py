@@ -1,6 +1,7 @@
 """Paper Table 2: memory footprint per method (index + raw vectors),
 including the compact-storage encoding (bf16 vectors + narrow neighbor
-ids, ``core/storage.py``) of the same index."""
+ids) and the quantized codecs (int8 / PQ vectors + split segment-offset
+neighbor ids, ``core/storage.py``, DESIGN.md §9) of the same index."""
 from __future__ import annotations
 
 import numpy as np
@@ -32,6 +33,17 @@ def run(quick=False):
             "table2", ds, "compact_over_f32",
             round(compact.nbytes / index.nbytes, 3),
         ))
+        for tag, st in (("int8", storage_mod.StorageConfig.int8()),
+                        ("pq", storage_mod.StorageConfig.pq())):
+            qidx = index.astype_storage(st)
+            rows.append((
+                "table2", ds, f"iRangeGraph_{tag}_mb",
+                round(qidx.nbytes / 1e6, 2),
+            ))
+            rows.append((
+                "table2", ds, f"{tag}_over_f32",
+                round(qidx.nbytes / index.nbytes, 3),
+            ))
         # single flat graph (Milvus/HNSW-style baseline): one layer of edges
         rows.append((
             "table2", ds, "flat_graph_mb",

@@ -52,7 +52,8 @@ def prefilter(index: RangeGraphIndex, queries, L, R, *, k=10, **_):
 def _filtered(index, queries, L, R, mode, k, config, legacy):
     config = config_mod.merge(config, _warn_where=f"{mode}filter", **legacy)
     return search_mod.search_filtered(
-        jnp.asarray(index.vectors), jnp.asarray(index.neighbors),
+        storage_mod.as_device(index.vectors),
+        storage_mod.as_device(index.neighbors),
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(L, jnp.int32), jnp.asarray(R, jnp.int32),
         mode=mode, k=k, config=config,
@@ -105,8 +106,8 @@ def basic_search(
     max_segs = max(len(d) for d in decomps)
     all_ids, all_dists = [], []
     nd_total = jnp.zeros((B,), jnp.int32)
-    vec = jnp.asarray(index.vectors)
-    nbrs = jnp.asarray(index.neighbors)
+    vec = storage_mod.as_device(index.vectors)
+    nbrs = storage_mod.as_device(index.neighbors)
     for s in range(max_segs):
         lay = np.zeros((B,), np.int32)
         lo = np.zeros((B,), np.int32)
@@ -162,9 +163,10 @@ def super_postfilter(
         lay[i], lo[i], hi[i] = segment_tree.covering_segment(
             int(L[i]), int(R[i]), index.logn
         )
-    vec = jnp.asarray(index.vectors)
+    vec = storage_mod.as_device(index.vectors)
     # raw row-gather nbr_fn below: decode the compact codec at this edge
-    nbrs = storage_mod.decode_neighbors(jnp.asarray(index.neighbors))
+    nbrs = storage_mod.decode_neighbors(
+        storage_mod.as_device(index.neighbors))
     Lj = jnp.asarray(L, jnp.int32)
     Rj = jnp.asarray(R, jnp.int32)
     out_ids = jnp.full((B, k), -1, jnp.int32)
@@ -240,16 +242,18 @@ def oracle_search(
     for i in range(B):
         groups.setdefault((int(L[i]), int(R[i])), []).append(i)
     # the oracle graphs must be pruned exactly like the index's own (same
-    # alpha/fill/prune backend), so reuse its whole config
+    # alpha/fill/prune backend), so reuse its whole config; codec tables
+    # decode once at this numpy edge (oracle quality shouldn't pay twice)
     cfg = index.build_cfg
+    vecs = storage_mod.decode_vectors(index.vectors)
     for (lo, hi), idxs in groups.items():
         keyed = (lo, hi)
         if keyed not in cache:
             cache[keyed] = build_mod.build_flat_graph(
-                index.vectors[lo : hi + 1], cfg
+                vecs[lo : hi + 1], cfg
             )
         g = cache[keyed]
-        sub = jnp.asarray(index.vectors[lo : hi + 1])
+        sub = jnp.asarray(vecs[lo : hi + 1])
         nn = sub.shape[0]
         qq = jnp.asarray(q[idxs])
         res = search_mod.search_fixed_layer(

@@ -67,6 +67,13 @@ class SearchConfig:
     metric:       "l2" | "ip".
     skip_layers:  Algorithm 1's skip-layer rule (improvised search only).
     max_iters:    beam iteration cap; None = the engine's ``4*ef + 32``.
+    rerank:       top-``r`` exact refinement inside the jitted improvised
+                  search (DESIGN.md §9): the beam returns
+                  ``max(k, min(rerank, ef))`` candidates, which are
+                  re-scored against the index's rerank sidecar (or the
+                  navigation vectors when none) and re-cut to ``k``.
+                  0 disables. Holds the recall gate for the quantized
+                  storage codecs (int8/PQ).
     """
 
     ef: int = 64
@@ -78,6 +85,7 @@ class SearchConfig:
     metric: str = "l2"
     skip_layers: bool = True
     max_iters: int | None = None
+    rerank: int = 0
 
     def __post_init__(self):
         if int(self.ef) < 1:
@@ -104,6 +112,8 @@ class SearchConfig:
             )
         if self.max_iters is not None and int(self.max_iters) < 1:
             raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        if int(self.rerank) < 0:
+            raise ValueError(f"rerank must be >= 0, got {self.rerank}")
 
     def replace(self, **kw) -> "SearchConfig":
         return dataclasses.replace(self, **kw)

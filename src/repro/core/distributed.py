@@ -90,6 +90,16 @@ def build_sharded(
     """
     cfg = cfg or build_mod.BuildConfig()
     storage = storage or storage_mod.default_config()
+    if (storage.vector_dtype in ("int8", "pq")
+            or storage.neighbor_dtype == "split"):
+        # codec structs don't stack into the [S, ...] shard-major arrays
+        # this layer shards over; quantized sharded serving is future work
+        raise ValueError(
+            "build_sharded does not support codec storage "
+            f"(vector_dtype={storage.vector_dtype!r}, "
+            f"neighbor_dtype={storage.neighbor_dtype!r}); use a plain "
+            "float/compact StorageConfig"
+        )
     n = vectors.shape[0]
     if not 1 <= n_shards <= n:
         raise ValueError(f"need 1 <= n_shards <= n, got S={n_shards} n={n}")

@@ -82,16 +82,19 @@ def _unpack_array(d: dict, field: str) -> np.ndarray:
 
 @dataclasses.dataclass
 class RangeGraphIndex:
-    vectors: np.ndarray        # [n, d] in storage.vector_dtype, rank order
+    vectors: np.ndarray        # [n, d] table or codec struct, rank order
     attrs: np.ndarray          # f64[n], sorted attribute values
     perm: np.ndarray           # original index of rank i
-    neighbors: np.ndarray      # [n, layers, m] in the neighbor codec dtype
+    neighbors: np.ndarray      # [n, layers, m] or SplitNeighbors struct
     m: int
     logn: int
     build_cfg: build_mod.BuildConfig
     storage: storage_mod.StorageConfig = dataclasses.field(
         default_factory=storage_mod.StorageConfig
     )
+    # higher-fidelity rerank sidecar (storage.rerank_dtype): None, an
+    # [n, d] array, or Int8Vectors — feeds SearchConfig.rerank refinement
+    rerank: object = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -123,9 +126,10 @@ class RangeGraphIndex:
             vectors, cfg, verbose=verbose, storage=storage
         )
         logn = int(math.ceil(math.log2(max(n, 2))))
+        rerank = storage_mod.encode_rerank(vectors, storage)
         vectors = storage_mod.encode_vectors(vectors, storage)
         return cls(vectors, attrs, perm, nbrs, cfg.m, logn, cfg,
-                   storage=storage)
+                   storage=storage, rerank=rerank)
 
     def astype_storage(
         self, storage: storage_mod.StorageConfig
@@ -133,32 +137,39 @@ class RangeGraphIndex:
         """Re-encode the stored arrays under ``storage`` — no rebuild.
 
         The graph is unchanged, so neighbor ids are bit-identical across
-        codecs and only vector precision changes (bf16/f16 round once; going
-        back to f32 does not restore already-rounded values)."""
+        codecs and only vector precision changes (bf16/f16/int8/pq round
+        once; going back to f32 does not restore already-rounded values).
+        Re-encoding starts from the highest-fidelity source available: the
+        rerank sidecar when present, else the stored vectors."""
+        src = (storage_mod.decode_vectors(self.rerank)
+               if self.rerank is not None
+               else storage_mod.decode_vectors(self.vectors))
         return dataclasses.replace(
             self,
-            vectors=storage_mod.encode_vectors(
-                storage_mod.decode_vectors(self.vectors), storage
-            ),
+            vectors=storage_mod.encode_vectors(src, storage),
             neighbors=storage_mod.encode_neighbors(
                 storage_mod.decode_neighbors(self.neighbors), self.n, storage
             ),
+            rerank=storage_mod.encode_rerank(src, storage),
             storage=storage,
         )
 
     @property
     def n(self) -> int:
-        return self.vectors.shape[0]
+        return storage_mod.table_n(self.vectors)
 
     @property
     def dim(self) -> int:
-        return self.vectors.shape[1]
+        return storage_mod.table_dim(self.vectors)
 
     @property
     def nbytes(self) -> int:
-        """Real stored footprint — halves under compact storage (the two
+        """Real stored footprint — sums codec-struct leaves (the two
         hot-path tables dominate; ``attrs`` stays f64 for rank fidelity)."""
-        return self.vectors.nbytes + self.neighbors.nbytes + self.attrs.nbytes
+        return (storage_mod.table_nbytes(self.vectors)
+                + storage_mod.table_nbytes(self.neighbors)
+                + storage_mod.table_nbytes(self.rerank)
+                + self.attrs.nbytes)
 
     # -- range mapping -------------------------------------------------------
     def ranks_of(self, lo_val, hi_val):
@@ -186,8 +197,8 @@ class RangeGraphIndex:
             edge_impl=edge_impl, _warn_where="RangeGraphIndex.search_ranks",
         )
         return search_mod.search_improvised(
-            jnp.asarray(self.vectors),
-            jnp.asarray(self.neighbors),
+            storage_mod.as_device(self.vectors),
+            storage_mod.as_device(self.neighbors),
             jnp.asarray(queries, jnp.float32),
             jnp.asarray(L, jnp.int32),
             jnp.asarray(R, jnp.int32),
@@ -195,6 +206,7 @@ class RangeGraphIndex:
             m_out=self.m,
             k=k,
             config=config,
+            rerank_store=storage_mod.as_device(self.rerank),
         )
 
     def search(self, queries, lo_val, hi_val, **kw) -> search_mod.SearchResult:
@@ -234,16 +246,36 @@ class RangeGraphIndex:
 
     # -- serialization ---------------------------------------------------------
     def save(self, path: str):
+        """Codec structs flatten to one crc32-checked field per leaf
+        (``vectors``/``vec_scales``/``vec_codebook``, ``neighbors``/
+        ``neighbors_lo``, ``rerank``/``rerank_scales``) so a bit flip in a
+        scale or codebook array is named on load, not just "vectors"."""
         payload = {
-            "vectors": _pack_array(self.vectors),
             "attrs": _pack_array(self.attrs),
             "perm": _pack_array(self.perm),
-            "neighbors": _pack_array(self.neighbors),
             "m": self.m,
             "logn": self.logn,
             "cfg": dataclasses.asdict(self.build_cfg),
             "storage": dataclasses.asdict(self.storage),
         }
+        if isinstance(self.vectors, storage_mod.Int8Vectors):
+            payload["vectors"] = _pack_array(self.vectors.codes)
+            payload["vec_scales"] = _pack_array(self.vectors.scales)
+        elif isinstance(self.vectors, storage_mod.PQVectors):
+            payload["vectors"] = _pack_array(self.vectors.codes)
+            payload["vec_codebook"] = _pack_array(self.vectors.codebook)
+        else:
+            payload["vectors"] = _pack_array(self.vectors)
+        if isinstance(self.neighbors, storage_mod.SplitNeighbors):
+            payload["neighbors"] = _pack_array(self.neighbors.hi)
+            payload["neighbors_lo"] = _pack_array(self.neighbors.lo)
+        else:
+            payload["neighbors"] = _pack_array(self.neighbors)
+        if isinstance(self.rerank, storage_mod.Int8Vectors):
+            payload["rerank"] = _pack_array(self.rerank.codes)
+            payload["rerank_scales"] = _pack_array(self.rerank.scales)
+        elif self.rerank is not None:
+            payload["rerank"] = _pack_array(self.rerank)
         raw = msgpack.packb(payload)
         digest = hashlib.sha256(raw).hexdigest()
         blob = msgpack.packb({"sha256": digest, "payload": raw})
@@ -281,7 +313,26 @@ class RangeGraphIndex:
                 "envelope", f"payload unpack failed loading {path}: {e}"
             ) from e
         vectors = _unpack_array(p["vectors"], "vectors")
+        if "vec_scales" in p:
+            vectors = storage_mod.Int8Vectors(
+                vectors, _unpack_array(p["vec_scales"], "vec_scales")
+            )
+        elif "vec_codebook" in p:
+            vectors = storage_mod.PQVectors(
+                vectors, _unpack_array(p["vec_codebook"], "vec_codebook")
+            )
         neighbors = _unpack_array(p["neighbors"], "neighbors")
+        if "neighbors_lo" in p:
+            neighbors = storage_mod.SplitNeighbors(
+                neighbors, _unpack_array(p["neighbors_lo"], "neighbors_lo")
+            )
+        rerank = None
+        if "rerank" in p:
+            rerank = _unpack_array(p["rerank"], "rerank")
+            if "rerank_scales" in p:
+                rerank = storage_mod.Int8Vectors(
+                    rerank, _unpack_array(p["rerank_scales"], "rerank_scales")
+                )
         st = p.get("storage")
         if st is None:  # pre-storage files: the stored dtypes ARE the config
             st = {"vector_dtype": str(vectors.dtype),
@@ -295,6 +346,7 @@ class RangeGraphIndex:
             logn=p["logn"],
             build_cfg=build_mod.BuildConfig(**p["cfg"]),
             storage=storage_mod.StorageConfig(**st),
+            rerank=rerank,
         )
 
 

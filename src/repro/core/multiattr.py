@@ -36,7 +36,7 @@ def _search_multiattr_jit(
     logn, m_out, k, mode, config: SearchConfig,
 ):
     nbrs = storage_mod.decode_neighbors(nbrs)
-    n = vectors.shape[0]
+    n = storage_mod.table_n(vectors)
     entries = search_mod.range_entry_ids(L, jnp.minimum(R, n - 1), n)
     ok = (entries >= L[:, None]) & (entries <= R[:, None])
     entries = jnp.where(ok, entries, -1)
@@ -92,8 +92,8 @@ def search_multiattr(
         edge_impl=edge_impl, _warn_where="search_multiattr",
     )
     return _search_multiattr_jit(
-        jnp.asarray(index.vectors),
-        jnp.asarray(index.neighbors),
+        storage_mod.as_device(index.vectors),
+        storage_mod.as_device(index.neighbors),
         jnp.asarray(attr2, jnp.float32),
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(L, jnp.int32),

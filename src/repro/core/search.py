@@ -171,7 +171,9 @@ def beam_search(
     ef = config.ef
     metric = config.metric
     dist_impl = config.dist_impl
-    n, d = vectors.shape
+    # vectors may be a quantized codec struct (storage.Int8Vectors /
+    # storage.PQVectors); the distance kernels decode per-row in VMEM
+    n = storage_mod.table_n(vectors)
     B = queries.shape[0]
     W = effective_expand_width(config.expand_width, ef)
     max_iters = config.max_iters
@@ -354,13 +356,21 @@ def tile_frontier(x, expand_width):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("logn", "m_out", "k", "config"))
-def _search_improvised_jit(vectors, nbrs, queries, L, R, *, logn, m_out, k,
-                           config: SearchConfig):
+def _search_improvised_jit(vectors, nbrs, queries, L, R, rerank_store=None,
+                           *, logn, m_out, k, config: SearchConfig):
     """The jitted improvised-search program: ONE static ``config`` instead
     of a kwarg pile, so equal configs share a compiled program — the unit
-    ``serve/executor.py`` AOT-compiles and caches."""
+    ``serve/executor.py`` AOT-compiles and caches.
+
+    ``rerank_store`` is the optional exact(er) sidecar table for
+    ``config.rerank > 0`` (DESIGN.md §9): the beam returns its top-``r``
+    candidates, which are re-scored exactly against the sidecar (falling
+    back to the navigation ``vectors`` when None — a no-op refinement for
+    exact codecs) and re-cut to ``k`` — all inside this one jit, so the
+    executor's compile accounting sees a single program.
+    """
     nbrs = storage_mod.decode_neighbors(nbrs)
-    n = vectors.shape[0]
+    n = storage_mod.table_n(vectors)
     expand_width = effective_expand_width(config.expand_width, config.ef)
     entries = range_entry_ids(L, jnp.minimum(R, n - 1), n)
     ok = (entries >= L[:, None]) & (entries <= R[:, None])
@@ -379,23 +389,43 @@ def _search_improvised_jit(vectors, nbrs, queries, L, R, *, logn, m_out, k,
             edge_impl=config.edge_impl, dist_impl=config.dist_impl,
         )
 
-    return beam_search(
-        vectors, queries, entries, None, k=k, config=config, hop_fn=hop_fn
+    r = max(k, min(config.rerank, config.ef)) if config.rerank else 0
+    res = beam_search(
+        vectors, queries, entries, None, k=r or k, config=config,
+        hop_fn=hop_fn,
     )
+    if not r:
+        return res
+    store = vectors if rerank_store is None else rerank_store
+    ids = res.ids                                          # [B, r]
+    x = storage_mod.decode_rows(store, jnp.maximum(ids, 0))  # [B, r, d] f32
+    qf = queries.astype(jnp.float32)
+    if config.metric == "ip":
+        dd = -jnp.einsum("bd,brd->br", qf, x)
+    else:
+        dd = ((x - qf[:, None, :]) ** 2).sum(-1)
+    dd = jnp.where(ids < 0, jnp.inf, dd)
+    _, take = jax.lax.top_k(-dd, k)
+    out_ids = jnp.take_along_axis(ids, take, 1)
+    out_dists = jnp.take_along_axis(dd, take, 1)
+    out_ids = jnp.where(jnp.isfinite(out_dists), out_ids, -1)
+    return SearchResult(out_ids, out_dists, res.n_hops, res.n_dists)
 
 
 def search_improvised(
     vectors, nbrs, queries, L, R, *, logn, m_out, k,
-    config: SearchConfig | None = None, ef=None, skip_layers=None,
-    metric=None, max_iters=None, expand_width=None, dist_impl=None,
-    edge_impl=None, hop_impl=None,
+    config: SearchConfig | None = None, rerank_store=None, ef=None,
+    skip_layers=None, metric=None, max_iters=None, expand_width=None,
+    dist_impl=None, edge_impl=None, hop_impl=None,
 ):
     """The paper's query path: beam search on the improvised dedicated graph.
 
     L, R: int32[B] per-query inclusive rank ranges. ``vectors``/``nbrs`` may
-    arrive in compact storage dtypes (bf16/f16 vectors, int16 ids): the
-    neighbor table decodes once here, outside the hop loop; vectors stay
-    compact end-to-end (the distance kernels upcast in-register).
+    arrive in any storage codec (bf16/f16/int8/PQ vectors, int16/split ids):
+    the neighbor table decodes once here, outside the hop loop; vectors stay
+    encoded end-to-end (the distance kernels decode in-register, DESIGN.md
+    §9). ``rerank_store`` + ``config.rerank`` enable the in-jit exact
+    refinement pass over the sidecar table.
 
     Knobs come from ``config`` (one frozen ``SearchConfig``); the loose
     kwargs are the deprecation shim.
@@ -407,8 +437,8 @@ def search_improvised(
         _warn_where="search_improvised",
     )
     return _search_improvised_jit(
-        vectors, nbrs, queries, L, R, logn=logn, m_out=m_out, k=k,
-        config=config,
+        vectors, nbrs, queries, L, R, rerank_store, logn=logn, m_out=m_out,
+        k=k, config=config,
     )
 
 
@@ -416,7 +446,7 @@ def search_improvised(
 def _search_fixed_layer_jit(vectors, nbrs, queries, seg_lo, seg_hi, *,
                             layer, k, config: SearchConfig):
     nbrs = storage_mod.decode_neighbors(nbrs)
-    n = vectors.shape[0]
+    n = storage_mod.table_n(vectors)
     hi_real = jnp.minimum(seg_hi, n - 1)
     entries = range_entry_ids(seg_lo, hi_real, n)
     # guard: empty / padded-away segments contribute no entry points, and an
@@ -464,7 +494,7 @@ def search_fixed_layer(
 def _search_filtered_jit(vectors, nbrs, queries, L, R, rng, *, mode, k,
                          config: SearchConfig):
     nbrs = storage_mod.decode_neighbors(nbrs)
-    n = vectors.shape[0]
+    n = storage_mod.table_n(vectors)
     mid = jnp.clip((L + R) // 2, 0, n - 1)
     entries = jnp.stack([mid, jnp.zeros_like(mid) + n // 2], axis=1)
 

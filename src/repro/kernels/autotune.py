@@ -9,7 +9,9 @@ a real TPU wants the MXU fed — so, like the build-path chunk auto-tuner
 (``core/build.py::auto_chunk``), picks are *measured*, not hardcoded:
 
   * ``CANDIDATES[kind]`` is the search space per kernel
-    ("hop" | "gather_dist" | "edge_select" | "prune");
+    ("hop" | "gather_dist" | "gather_dist_codec" | "edge_select" |
+    "prune" — the codec kind retunes the decode tile for quantized
+    tables, DESIGN.md §9);
   * ``autotune(kind, run)`` times ``run(**params)`` for every candidate
     (min over ``iters`` after a warmup call that also pays the compile)
     and returns a record ``{kind, best, best_ms, candidates: [...]}``;
@@ -49,6 +51,13 @@ CANDIDATES = {
     "gather_dist": [
         {"block_b": bb, "block_m": bm, "window": w}
         for bb in (4, 8) for bm in (64, 128) for w in (8, 16)
+    ],
+    # codec tables (int8/PQ) change the DMA row width (narrow int8/uint8
+    # rows) and add in-register decode work, so the optimal tile differs
+    # from the f32 table's — tuned as its own kind (DESIGN.md §9)
+    "gather_dist_codec": [
+        {"block_b": bb, "block_m": bm, "window": w}
+        for bb in (4, 8) for bm in (64, 128) for w in (8, 16, 32)
     ],
     "edge_select": [
         {"block_f": bf, "window": w}

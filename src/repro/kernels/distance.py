@@ -51,7 +51,13 @@ def pairwise_dist_kernel_call(
     q, x, *, metric="l2", block_q=128, block_n=128, block_k=512,
     interpret=False,
 ):
-    """q[Bq, D], x[N, D] -> f32[Bq, N]. Pads to block multiples internally."""
+    """Tiled all-pairs distance (DESIGN.md §3; oracle: ``ref.pairwise_dist``).
+
+    q[Bq, D], x[N, D] (f32/bf16/f16 — upcast in-register, math f32; the
+    quantized codec structs go through ``gather_distance.py``/``hop.py``,
+    not this dense kernel) -> f32[Bq, N] with ``metric`` "l2" (squared) or
+    "ip" (negated). Pads every dim to its block multiple internally.
+    """
     Bq, D = q.shape
     N, _ = x.shape
     bq = min(block_q, max(8, Bq))

@@ -150,8 +150,14 @@ def edge_select_kernel_call(
     nbrs, us, L, R, *, logn, m_out, skip_layers=True, block_f=None,
     window=8, dedup="lazy", interpret=False,
 ):
-    """nbrs int32[n, layers, m], us int32[F] (-1 masked), L/R scalars or
-    int32[F] -> int32[F, m_out] improvised edges, -1 padded.
+    """Fused per-hop edge improvisation (DESIGN.md §2/§3; oracle:
+    ``ref.select_edges``).
+
+    nbrs int16/int32[n, layers, m] (any compact neighbor width, -1
+    sentinel; ``SplitNeighbors`` structs decode before dispatch in
+    ``ops.select_edges``), us int32[F] (-1 masked), L/R scalars or
+    int32[F] -> int32[F, m_out] improvised edges, -1 padded. Ids are
+    bit-identical to the oracle across dtypes and backends.
 
     Pads F to the ``block_f`` row-tile multiple internally; the table is
     passed flattened ``[n, layers*m]`` so each frontier node is one

@@ -106,7 +106,14 @@ def flash_attention_kernel_call(
     q, k, v, *, causal=True, window=None, softcap=None, scale=None,
     q_offset=0, block_q=128, block_k=128, interpret=False,
 ):
-    """q[B, Hq, Sq, Dh], k/v[B, Hkv, Skv, Dh] -> [B, Hq, Sq, Dh]."""
+    """Blockwise attention (module docstring above; dispatch contract and
+    backend-rejection tests: DESIGN.md §6; oracle: ``ref.attention``).
+
+    q[B, Hq, Sq, Dh], k/v[B, Hkv, Skv, Dh] with ``Hq % Hkv == 0`` (GQA) ->
+    [B, Hq, Sq, Dh] in q's dtype; softmax statistics and accumulation are
+    f32 regardless of input dtype. No codec structs here — attention
+    operands are activations, not stored tables.
+    """
     B, Hq, Sq, Dh = q.shape
     _, Hkv, Skv, _ = k.shape
     assert Hq % Hkv == 0, (Hq, Hkv)

@@ -1,23 +1,35 @@
 """Pallas TPU kernel: fused gather + masked distance (the beam-search hop).
 
-Each beam-search iteration needs distances from ``B`` queries to the ``M``
-neighbors just pulled from the improvised graph — ids ``int32[B, M]`` with
-``-1`` marking masked slots. The XLA formulation materializes the gathered
-``[B, M, d]`` tensor in HBM before the einsum; at serving batch sizes that
-intermediate dominates the hop's HBM traffic. Here the gather lands directly
-in VMEM: per ``(bb, bm)`` tile the kernel row-DMAs only the *valid* vector
-rows from the table (kept whole in ``ANY``/HBM space, never blocked) into a
-VMEM scratch, overlapping up to ``window`` copies, then emits masked
-``f32[bb, bm]`` distances off one MXU matmul — no ``[B, M, d]`` intermediate
-ever exists.
+DESIGN.md §3 (hot path) and §9 (codec decode). Each beam-search iteration
+needs distances from ``B`` queries to the ``M`` neighbors just pulled from
+the improvised graph — ids ``int32[B, M]`` with ``-1`` marking masked slots.
+The XLA formulation materializes the gathered ``[B, M, d]`` tensor in HBM
+before the einsum; at serving batch sizes that intermediate dominates the
+hop's HBM traffic. Here the gather lands directly in VMEM: per ``(bb, bm)``
+tile the kernel row-DMAs only the *valid* vector rows from the table (kept
+whole in ``ANY``/HBM space, never blocked) into a VMEM scratch, overlapping
+up to ``window`` copies, then emits masked ``f32[bb, bm]`` distances off one
+MXU matmul — no ``[B, M, d]`` intermediate ever exists.
 
-Math matches ``kernels/ref.py::gather_dist`` (and the historical inline
-``_pairdist``) bit-for-bit in f32: ``||x||^2 - 2 x.q + ||q||^2`` for l2,
-``-x.q`` for ip; invalid slots return ``+inf``.
+**Codec decode happens here, in VMEM registers** (§9): the table may be a
+``storage.Int8Vectors`` (the DMA moves int8 rows; the kernel multiplies by
+the pre-gathered per-row scales) or a ``storage.PQVectors`` (the DMA moves
+uint8 code rows; the kernel looks the codebook — resident in VMEM — up per
+subspace). The decoded f32 rows exist only in the register file /
+scratch-local values; no widened table ever hits HBM, so the footprint
+saving is also a hop-bandwidth saving.
 
-VMEM residency per program is ``bb*bm*d_pad*4B`` for the gather scratch
-(default tiles 8x128 at d=128: 0.5 MB) plus the query tile; lower ``block_m``
-for very large ``d``. CPU/CI runs use ``interpret=True``.
+Shape contract: ``q f32[B, d]``, ``table [n, d]`` float dtypes or codec
+struct, ``ids int32[B, M]`` -> ``f32[B, M]``. Math matches
+``kernels/ref.py::gather_dist`` (and the historical inline ``_pairdist``)
+bit-for-bit in f32 under identical fusion: ``||x||^2 - 2 x.q + ||q||^2``
+for l2, ``-x.q`` for ip; invalid slots return ``+inf``.
+
+VMEM residency per program is ``bb*bm*row_bytes`` for the gather scratch
+(default tiles 8x128: 0.5 MB at f32 d=128, 128 KB at int8) plus the query
+tile and, for PQ, the ``[M*256, dsub]`` codebook (128 KB at d=128, M=32).
+The codec tiles are autotuned separately (``kind="gather_dist_codec"``,
+``kernels/autotune.py``). CPU/CI runs use ``interpret=True``.
 """
 from __future__ import annotations
 
@@ -28,19 +40,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import storage as _storage
+
 __all__ = ["gather_distance_kernel_call"]
 
 
 def _gather_dist_kernel(
-    q_ref,       # VMEM [bb, d]
+    q_ref,       # VMEM [bb, dp]
     ids_smem,    # SMEM [bb, bm] (DMA row indices)
     ids_vmem,    # VMEM [bb, bm] (vectorized mask)
-    table_ref,   # ANY  [n, d]   (full table, never blocked)
-    o_ref,       # VMEM [bb, bm]
-    xbuf,        # VMEM scratch [bb*bm, d]
-    sems,        # DMA semaphores [window]
-    *, bb, bm, metric, window,
+    *refs,       # table_ref (ANY [n, w]), [aux_ref], o_ref, xbuf, sems
+    bb, bm, metric, window, codec, dp, pq_m, pq_dsub,
 ):
+    if codec is None:
+        table_ref, o_ref, xbuf, sems = refs
+    else:
+        table_ref, aux_ref, o_ref, xbuf, sems = refs
     total = bb * bm
 
     def slot_id(t):
@@ -78,8 +93,23 @@ def _gather_dist_kernel(
 
     jax.lax.fori_loop(max(0, total - window), total, drain, 0)
 
-    q = q_ref[...].astype(jnp.float32)       # [bb, d]
-    x = xbuf[...].astype(jnp.float32)        # [bb*bm, d]
+    q = q_ref[...].astype(jnp.float32)       # [bb, dp]
+    # codec decode, in-register (§9): xbuf holds the *stored* rows
+    if codec == "int8":
+        x = xbuf[...].astype(jnp.float32)                 # [bb*bm, dp]
+        x = x * aux_ref[...].reshape(total, 1)            # per-row scales
+    elif codec == "pq":
+        codes = xbuf[...][:, :pq_m].astype(jnp.int32)     # [bb*bm, M]
+        sub = jax.lax.broadcasted_iota(jnp.int32, (total, pq_m), 1)
+        idx = codes + sub * _storage.PQ_CENTROIDS
+        x = jnp.take(aux_ref[...], idx.reshape(-1), axis=0)
+        x = x.reshape(total, pq_m * pq_dsub)
+        pad = dp - pq_m * pq_dsub
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((total, pad), jnp.float32)], axis=1)
+    else:
+        x = xbuf[...].astype(jnp.float32)                 # [bb*bm, dp]
     # one MXU pass against every query in the tile, then keep the diagonal
     # query<->row pairing (overcompute factor bb is tiny next to the gather)
     dots = jax.lax.dot_general(
@@ -107,14 +137,18 @@ def gather_distance_kernel_call(
     q, table, ids, *, metric="l2", block_b=8, block_m=128, window=16,
     interpret=False,
 ):
-    """q[B, d], table[n, d], ids int32[B, M] (-1 masked) -> f32[B, M].
+    """q[B, d], table ([n, d] float / Int8Vectors / PQVectors), ids
+    int32[B, M] (-1 masked) -> f32[B, M].
 
-    Distances from query b to table[ids[b, j]]; +inf where ids < 0. Pads B/M
-    to tile multiples and d to the 128 lane width internally (zero columns
-    are exact for both metrics).
+    Distances from query b to the decoded table[ids[b, j]]; +inf where
+    ids < 0. Pads B/M to tile multiples and the stored row width to the 128
+    lane width internally (zero columns are exact for both metrics). For
+    ``Int8Vectors`` the per-row scales are pre-gathered outside the kernel
+    (ids are known at call time) and ride in as a ``[bb, bm]`` f32 tile; for
+    ``PQVectors`` the flattened codebook is a VMEM-resident input and codes
+    decode in-register after the DMA.
     """
     B, d = q.shape
-    n, _ = table.shape
     M = ids.shape[1]
     bb = min(block_b, max(8, B))
     bm = 128 if M <= 128 else min(block_m, M)
@@ -128,31 +162,56 @@ def gather_distance_kernel_call(
         return jnp.pad(a, widths, constant_values=value)
 
     qp = pad_to(pad_to(q, bb, 0), 128, 1)
-    tp = pad_to(table, 128, 1)
     idp = pad_to(pad_to(ids, bb, 0, value=-1), bm, 1, value=-1)
     dp = qp.shape[1]
     grid = (qp.shape[0] // bb, idp.shape[1] // bm)
 
+    codec, aux, aux_spec, pq_m, pq_dsub = None, None, None, 0, 0
+    if isinstance(table, _storage.Int8Vectors):
+        codec = "int8"
+        tbl = pad_to(table.codes, 128, 1)
+        scales = table.scales[jnp.maximum(ids, 0)].astype(jnp.float32)
+        aux = pad_to(pad_to(scales, bb, 0), bm, 1)
+        aux_spec = pl.BlockSpec((bb, bm), lambda i, j: (i, j))
+        xbuf_shape = (bb * bm, tbl.shape[1])
+    elif isinstance(table, _storage.PQVectors):
+        codec = "pq"
+        pq_m, _, pq_dsub = table.codebook.shape
+        tbl = pad_to(table.codes, 128, 1)
+        aux = table.codebook.reshape(pq_m * _storage.PQ_CENTROIDS, pq_dsub)
+        aux_spec = pl.BlockSpec(aux.shape, lambda i, j: (0, 0))
+        xbuf_shape = (bb * bm, tbl.shape[1])
+    else:
+        tbl = pad_to(table, 128, 1)
+        xbuf_shape = (bb * bm, dp)
+
+    in_specs = [
+        pl.BlockSpec((bb, dp), lambda i, j: (i, 0)),
+        pl.BlockSpec((bb, bm), lambda i, j: (i, j),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    args = [qp, idp, idp, tbl]
+    if codec is not None:
+        in_specs.append(aux_spec)
+        args.append(aux)
+
     out = pl.pallas_call(
         functools.partial(
             _gather_dist_kernel, bb=bb, bm=bm, metric=metric,
-            window=min(window, bb * bm),
+            window=min(window, bb * bm), codec=codec, dp=dp,
+            pq_m=pq_m, pq_dsub=pq_dsub,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, dp), lambda i, j: (i, 0)),
-            pl.BlockSpec((bb, bm), lambda i, j: (i, j),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qp.shape[0], idp.shape[1]),
                                        jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((bb * bm, dp), table.dtype),
+            pltpu.VMEM(xbuf_shape, tbl.dtype),
             pltpu.SemaphoreType.DMA((min(window, bb * bm),)),
         ],
         interpret=interpret,
-    )(qp, idp, idp, tp)
+    )(*args)
     return out[:B, :M]

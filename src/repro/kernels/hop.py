@@ -47,6 +47,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import storage as _storage
 from repro.kernels import ref as _ref
 
 __all__ = ["hop_kernel_call"]
@@ -63,16 +64,19 @@ def _hop_kernel(
     q_ref,       # VMEM [bb, dp]
     vis_ref,     # VMEM [bb, words] (query tile's bitset rows)
     nbrs_ref,    # ANY  [n, K]  (packed edge table, never blocked)
-    table_ref,   # ANY  [n, dp] (vector table, never blocked)
-    nbr_out,     # VMEM [bb, W*m_out] int32
-    dist_out,    # VMEM [bb, W*m_out] f32
-    nvalid_out,  # VMEM [bb, W*m_out] int32 (0/1)
-    vis_out,     # VMEM [bb, words] uint32
-    ebuf,        # VMEM scratch [bb*W, K] int32 gathered edge blocks
-    xbuf,        # VMEM scratch [bb*W*m_out, dp] gathered vector rows
-    sems,        # DMA semaphores [window]
-    *, bb, W, K, m, m_out, logn, skip_layers, metric, window,
+    table_ref,   # ANY  [n, w]  (vector table / code table, never blocked)
+    *refs,       # [aux_ref], outputs, ebuf, xbuf, [sbuf], sems, [sems2]
+    bb, W, K, m, m_out, logn, skip_layers, metric, window,
+    codec, dp, pq_m, pq_dsub,
 ):
+    if codec is None:
+        nbr_out, dist_out, nvalid_out, vis_out, ebuf, xbuf, sems = refs
+    elif codec == "int8":
+        (aux_ref, nbr_out, dist_out, nvalid_out, vis_out,
+         ebuf, xbuf, sbuf, sems, sems2) = refs
+    else:  # pq
+        (aux_ref, nbr_out, dist_out, nvalid_out, vis_out,
+         ebuf, xbuf, sems) = refs
     WM = W * m_out
     F = bb * W
 
@@ -173,16 +177,27 @@ def _hop_kernel(
             table_ref.at[vec_id(t)], xbuf.at[t], sems.at[t % window]
         )
 
+    def scale_copy(t):
+        # int8 only: ids are discovered in-kernel, so the per-row scales
+        # must ride a parallel DMA (aux_ref is ANY [n, 1] f32)
+        return pltpu.make_async_copy(
+            aux_ref.at[vec_id(t)], sbuf.at[t], sems2.at[t % window]
+        )
+
     def vec_fill(t, carry):
         @pl.when(t >= window)
         def _():
             @pl.when(vec_id(t - window) >= 0)
             def _():
                 vec_copy(t - window).wait()
+                if codec == "int8":
+                    scale_copy(t - window).wait()
 
         @pl.when(vec_id(t) >= 0)
         def _():
             vec_copy(t).start()
+            if codec == "int8":
+                scale_copy(t).start()
 
         return carry
 
@@ -192,6 +207,8 @@ def _hop_kernel(
         @pl.when(vec_id(t) >= 0)
         def _():
             vec_copy(t).wait()
+            if codec == "int8":
+                scale_copy(t).wait()
 
         return carry
 
@@ -199,7 +216,22 @@ def _hop_kernel(
 
     # -- distance: one MXU pass, keep the diagonal query<->row pairing ------
     q = q_ref[...].astype(jnp.float32)                    # [bb, dp]
-    x = xbuf[...].astype(jnp.float32)                     # [bb*WM, dp]
+    # codec decode, in-register (DESIGN.md §9): xbuf holds the stored rows
+    if codec == "int8":
+        x = xbuf[...].astype(jnp.float32)                 # [bb*WM, w]
+        x = x * sbuf[...].reshape(bb * WM, 1)             # per-row scales
+    elif codec == "pq":
+        codes = xbuf[...][:, :pq_m].astype(jnp.int32)     # [bb*WM, M]
+        sub = jax.lax.broadcasted_iota(jnp.int32, (bb * WM, pq_m), 1)
+        idx = codes + sub * _storage.PQ_CENTROIDS
+        x = jnp.take(aux_ref[...], idx.reshape(-1), axis=0)
+        x = x.reshape(bb * WM, pq_m * pq_dsub)
+        pad = dp - pq_m * pq_dsub
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((bb * WM, pad), jnp.float32)], axis=1)
+    else:
+        x = xbuf[...].astype(jnp.float32)                 # [bb*WM, dp]
     dots = jax.lax.dot_general(
         x, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ).reshape(bb, WM, bb)
@@ -224,16 +256,21 @@ def hop_kernel_call(
     q, table, nbrs, u, L, R, visited, exp_ok, *, logn, m_out,
     skip_layers=True, metric="l2", block_b=4, window=8, interpret=False,
 ):
-    """One fused whole-hop launch. See ``kernels/ref.py::hop`` for the
-    semantic contract and shapes: q f32[B, d], table [n, d], nbrs
-    int32[n, layers, m] (pre-decoded), u int32[B, W], L/R int32[B*W],
-    visited uint32[B, words], exp_ok bool[B, W]. Returns
-    ``(nbr, ndist, nvalid, visited')``.
+    """One fused whole-hop launch (DESIGN.md §3). See ``kernels/ref.py::hop``
+    for the semantic contract and shapes: q f32[B, d], table ([n, d] float /
+    Int8Vectors / PQVectors), nbrs int32[n, layers, m] (pre-decoded), u
+    int32[B, W], L/R int32[B*W], visited uint32[B, words], exp_ok
+    bool[B, W]. Returns ``(nbr, ndist, nvalid, visited')``.
 
-    Pads B to the ``block_b`` tile multiple and d to the 128 lane width
-    internally (zero columns are exact for both metrics); the edge and
-    vector tables pass flattened/un-blocked so every gather is one
-    contiguous row DMA.
+    Pads B to the ``block_b`` tile multiple and the stored row width to the
+    128 lane width internally (zero columns are exact for both metrics);
+    the edge and vector tables pass flattened/un-blocked so every gather is
+    one contiguous row DMA. Codec decode happens in-register after the DMA
+    (DESIGN.md §9). Because the gathered ids are *discovered inside* the
+    kernel, the int8 per-row scales cannot be pre-gathered like
+    ``gather_distance.py`` does — they ride as an ``ANY [n, 1]`` f32 input
+    with a parallel per-row DMA (second semaphore array) into a
+    ``[bb*WM, 1]`` scratch; the PQ codebook is a VMEM-resident input.
     """
     B, d = q.shape
     n, layers, m = nbrs.shape
@@ -261,7 +298,6 @@ def hop_kernel_call(
     )                                                     # [B, 4W]
     meta = pad_to(meta, bb, 0, value=-1)
     qp = pad_to(pad_to(q, bb, 0), 128, 1)
-    tp = pad_to(table, 128, 1)
     vp = pad_to(visited, bb, 0)
     dp = qp.shape[1]
     Bp = meta.shape[0]
@@ -269,21 +305,53 @@ def hop_kernel_call(
     WM = W * m_out
     win = max(1, min(window, bb * W))
 
+    codec, aux, aux_spec, pq_m, pq_dsub = None, None, None, 0, 0
+    if isinstance(table, _storage.Int8Vectors):
+        codec = "int8"
+        tp = pad_to(table.codes, 128, 1)
+        aux = table.scales.astype(jnp.float32).reshape(n, 1)
+        aux_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    elif isinstance(table, _storage.PQVectors):
+        codec = "pq"
+        pq_m, _, pq_dsub = table.codebook.shape
+        tp = pad_to(table.codes, 128, 1)
+        aux = table.codebook.reshape(pq_m * _storage.PQ_CENTROIDS, pq_dsub)
+        aux_spec = pl.BlockSpec(aux.shape, lambda i: (0, 0))
+    else:
+        tp = pad_to(table, 128, 1)
+
+    in_specs = [
+        pl.BlockSpec((bb, 4 * W), lambda i: (i, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((bb, 4 * W), lambda i: (i, 0)),
+        pl.BlockSpec((bb, dp), lambda i: (i, 0)),
+        pl.BlockSpec((bb, words), lambda i: (i, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    args = [meta, meta, qp, vp, nbrs.reshape(n, K), tp]
+    if codec is not None:
+        in_specs.append(aux_spec)
+        args.append(aux)
+
+    scratch_shapes = [
+        pltpu.VMEM((bb * W, K), jnp.int32),
+        pltpu.VMEM((bb * WM, tp.shape[1]), tp.dtype),
+    ]
+    if codec == "int8":
+        scratch_shapes.append(pltpu.VMEM((bb * WM, 1), jnp.float32))
+    scratch_shapes.append(pltpu.SemaphoreType.DMA((win,)))
+    if codec == "int8":
+        scratch_shapes.append(pltpu.SemaphoreType.DMA((win,)))
+
     nbr, dist, nvalid, vis = pl.pallas_call(
         functools.partial(
             _hop_kernel, bb=bb, W=W, K=K, m=m, m_out=m_out, logn=logn,
             skip_layers=skip_layers, metric=metric, window=win,
+            codec=codec, dp=dp, pq_m=pq_m, pq_dsub=pq_dsub,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, 4 * W), lambda i: (i, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((bb, 4 * W), lambda i: (i, 0)),
-            pl.BlockSpec((bb, dp), lambda i: (i, 0)),
-            pl.BlockSpec((bb, words), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bb, WM), lambda i: (i, 0)),
             pl.BlockSpec((bb, WM), lambda i: (i, 0)),
@@ -296,11 +364,7 @@ def hop_kernel_call(
             jax.ShapeDtypeStruct((Bp, WM), jnp.int32),
             jax.ShapeDtypeStruct((Bp, words), jnp.uint32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((bb * W, K), jnp.int32),
-            pltpu.VMEM((bb * WM, dp), table.dtype),
-            pltpu.SemaphoreType.DMA((win,)),
-        ],
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(meta, meta, qp, vp, nbrs.reshape(n, K), tp)
+    )(*args)
     return nbr[:B], dist[:B], nvalid[:B] != 0, vis[:B]

@@ -112,16 +112,24 @@ def gather_dist(q, table, ids, *, metric="l2", impl="auto", **block_kw):
     """Fused gather + masked distance for the beam-search hop.
 
     "pallas" runs the Mosaic kernel (no [B, M, d] intermediate); "xla" is the
-    gather+einsum reference, which is also what "auto" picks off-TPU.
+    gather+einsum reference, which is also what "auto" picks off-TPU. The
+    table may be a plain float [n, d] array or a codec struct
+    (``storage.Int8Vectors`` / ``storage.PQVectors``, DESIGN.md §9): both
+    backends decode — XLA via ``storage.decode_rows``, Pallas in-register
+    after the row DMA. Codec tables use the separately-tuned
+    ``"gather_dist_codec"`` autotune pick (narrow rows shift the optimum).
     """
     if impl == "auto":
         impl = default_impl("dist")
     _check_impl("gather_dist", impl, {"pallas", "xla"})
     if impl == "xla":
         return _ref.gather_dist(q, table, ids, metric=metric)
+    kind = ("gather_dist_codec"
+            if isinstance(table, (_storage.Int8Vectors, _storage.PQVectors))
+            else "gather_dist")
     return _gather.gather_distance_kernel_call(
         q, table, ids, metric=metric, interpret=_interpret(),
-        **{**_autotune.get_pick("gather_dist"), **block_kw},
+        **{**_autotune.get_pick(kind), **block_kw},
     )
 
 
@@ -166,7 +174,7 @@ _prune_xla_vecs = functools.partial(
 
 @functools.partial(jax.jit, static_argnames=("m", "fill"))
 def _prune_legacy(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True):
-    cvec = table[jnp.maximum(cand_ids, 0)].astype(jnp.float32)
+    cvec = _storage.decode_rows(table, jnp.maximum(cand_ids, 0))
     return _legacy_rng.prune_batch(
         cand_ids, cand_dists, cvec, m=m, alpha=alpha, fill=fill
     )
@@ -188,6 +196,10 @@ def prune(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True,
     ``cand_dists``) — saves the xla/legacy paths a redundant gather. The
     Pallas path ignores it: DMA-ing rows straight from ``table`` is the
     point. Gathers are exact, so results are identical either way.
+
+    ``table`` may be a codec struct (``storage.Int8Vectors`` /
+    ``storage.PQVectors``); every backend decodes — the Pallas kernel
+    in-register after the row DMA (DESIGN.md §9).
     """
     if impl == "auto":
         impl = default_impl("prune")
@@ -238,10 +250,12 @@ def hop(q, table, nbrs, u, L, R, visited, exp_ok, *, logn, m_out,
     (nbr, nvalid, visited) are bit-identical across backends; distances
     agree to f32 tolerance.
 
-    Shapes: q f32[B, d], table [n, d], nbrs [n, layers, m] (compact int16
-    decodes here), u int32[B, W], L/R int32[B*W], visited uint32[B, words],
-    exp_ok bool[B, W] -> (nbr i32[B, W*m_out], ndist f32[B, W*m_out],
-    nvalid bool[B, W*m_out], visited' uint32[B, words]).
+    Shapes: q f32[B, d], table ([n, d] float or a codec struct —
+    ``storage.Int8Vectors`` / ``storage.PQVectors``, decoded in-register by
+    the megakernel per DESIGN.md §9), nbrs [n, layers, m] (compact
+    int16/split decodes here), u int32[B, W], L/R int32[B*W], visited
+    uint32[B, words], exp_ok bool[B, W] -> (nbr i32[B, W*m_out], ndist
+    f32[B, W*m_out], nvalid bool[B, W*m_out], visited' uint32[B, words]).
     """
     if impl == "auto":
         forced = os.environ.get("REPRO_HOP_IMPL")

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import storage as _storage
+
 __all__ = ["prune_kernel_call"]
 
 
@@ -43,12 +45,13 @@ def _prune_kernel(
     ids_smem,    # SMEM [bb, C] (DMA row indices)
     ids_vmem,    # VMEM [bb, C] (vectorized ids)
     du_ref,      # VMEM [bb, C] squared distances to u
-    table_ref,   # ANY  [n, d]  (full table, never blocked)
-    o_ref,       # VMEM [bb, m]
-    xbuf,        # VMEM scratch [bb*C, d] gathered candidate vectors
-    sems,        # DMA semaphores [window]
-    *, bb, C, m, alpha, fill, window,
+    *refs,       # table_ref (ANY [n, w]), [aux_ref], o_ref, xbuf, sems
+    bb, C, m, alpha, fill, window, codec, pq_m, pq_dsub,
 ):
+    if codec is None:
+        table_ref, o_ref, xbuf, sems = refs
+    else:
+        table_ref, aux_ref, o_ref, xbuf, sems = refs
     total = bb * C
     big = jnp.int32(2**30)
 
@@ -89,7 +92,18 @@ def _prune_kernel(
 
     ids = ids_vmem[...]                                   # [bb, C]
     du = du_ref[...]                                      # [bb, C]
-    x = xbuf[...].astype(jnp.float32)                     # [bb*C, d]
+    # codec decode, in-register (DESIGN.md §9): xbuf holds the stored rows
+    if codec == "int8":
+        x = xbuf[...].astype(jnp.float32)
+        x = x * aux_ref[...].reshape(total, 1)            # per-row scales
+    elif codec == "pq":
+        codes = xbuf[...][:, :pq_m].astype(jnp.int32)
+        sub = jax.lax.broadcasted_iota(jnp.int32, (total, pq_m), 1)
+        idx = codes + sub * _storage.PQ_CENTROIDS
+        x = jnp.take(aux_ref[...], idx.reshape(-1), axis=0)
+        x = x.reshape(total, pq_m * pq_dsub)
+    else:
+        x = xbuf[...].astype(jnp.float32)                 # [bb*C, d]
     xx = jnp.sum(x * x, axis=1).reshape(bb, C)            # [bb, C]
     pos = jax.lax.broadcasted_iota(jnp.int32, (bb, C), 1)
     valid = (ids >= 0) & jnp.isfinite(du)
@@ -160,15 +174,19 @@ def prune_kernel_call(
     cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True, block_b=8,
     window=16, interpret=False,
 ):
-    """cand_ids int32[B, C] (-1 masked), cand_dists f32[B, C] (inf masked),
-    table [n, d] -> int32[B, m] pruned neighbor ids, -1 padded.
+    """Fused construction prune (DESIGN.md §4; oracle: ``ref.prune``).
 
-    Pads B to the ``block_b`` row-tile multiple and d to the 128 lane width
-    internally (zero columns are exact for squared L2); the table is passed
-    un-blocked so each candidate is one contiguous row DMA.
+    cand_ids int32[B, C] (-1 masked), cand_dists f32[B, C] (inf masked),
+    table ([n, d] float / Int8Vectors / PQVectors) -> int32[B, m] pruned
+    neighbor ids, -1 padded.
+
+    Pads B to the ``block_b`` row-tile multiple and the stored row width to
+    the 128 lane width internally (zero columns are exact for squared L2);
+    the table is passed un-blocked so each candidate is one contiguous row
+    DMA. Codec tables decode in VMEM registers after the DMA (DESIGN.md §9),
+    exactly like the gather-distance kernel.
     """
     B, C = cand_ids.shape
-    n, d = table.shape
     bb = min(block_b, max(8, B))
     ids = cand_ids.astype(jnp.int32)
     du = cand_dists.astype(jnp.float32)
@@ -183,28 +201,50 @@ def prune_kernel_call(
 
     idp = pad_to(ids, bb, 0, value=-1)
     dup_ = pad_to(du, bb, 0, value=jnp.inf)
-    tp = pad_to(table, 128, 1)
     grid = (idp.shape[0] // bb,)
+
+    codec, aux, aux_spec, pq_m, pq_dsub = None, None, None, 0, 0
+    if isinstance(table, _storage.Int8Vectors):
+        codec = "int8"
+        tp = pad_to(table.codes, 128, 1)
+        scales = table.scales[jnp.maximum(ids, 0)].astype(jnp.float32)
+        aux = pad_to(scales, bb, 0)
+        aux_spec = pl.BlockSpec((bb, C), lambda i: (i, 0))
+    elif isinstance(table, _storage.PQVectors):
+        codec = "pq"
+        pq_m, _, pq_dsub = table.codebook.shape
+        tp = pad_to(table.codes, 128, 1)
+        aux = table.codebook.reshape(pq_m * 256, pq_dsub)
+        aux_spec = pl.BlockSpec(aux.shape, lambda i: (0, 0))
+    else:
+        tp = pad_to(table, 128, 1)
+
+    in_specs = [
+        pl.BlockSpec((bb, C), lambda i: (i, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((bb, C), lambda i: (i, 0)),
+        pl.BlockSpec((bb, C), lambda i: (i, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    args = [idp, idp, dup_, tp]
+    if codec is not None:
+        in_specs.append(aux_spec)
+        args.append(aux)
 
     out = pl.pallas_call(
         functools.partial(
             _prune_kernel, bb=bb, C=C, m=m, alpha=alpha, fill=fill,
-            window=min(window, bb * C),
+            window=min(window, bb * C), codec=codec, pq_m=pq_m,
+            pq_dsub=pq_dsub,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, C), lambda i: (i, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((bb, C), lambda i: (i, 0)),
-            pl.BlockSpec((bb, C), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, m), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((idp.shape[0], m), jnp.int32),
         scratch_shapes=[
-            pltpu.VMEM((bb * C, tp.shape[1]), table.dtype),
+            pltpu.VMEM((bb * C, tp.shape[1]), tp.dtype),
             pltpu.SemaphoreType.DMA((min(window, bb * C),)),
         ],
         interpret=interpret,
-    )(idp, idp, dup_, tp)
+    )(*args)
     return out[:B]

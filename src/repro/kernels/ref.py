@@ -1,7 +1,11 @@
 """Pure-jnp oracles for every Pallas kernel (the correctness contract).
 
-Each function here is the semantic definition; kernels must match it to
-float tolerance across the shape/dtype sweeps in tests/test_kernels_*.
+Each function here is the semantic definition (DESIGN.md §6); kernels must
+match it to float tolerance across the shape/dtype sweeps in
+tests/test_kernels_*. Table-reading oracles accept the quantized codec
+structs (``storage.Int8Vectors`` / ``storage.PQVectors``) and decode
+through ``storage.decode_rows`` — the same values the kernels' in-VMEM
+dequant must produce (DESIGN.md §9, tests/test_codecs.py).
 """
 from __future__ import annotations
 
@@ -10,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import bitset as _bitset
 from repro.core import segment_tree
+from repro.core import storage as _storage
 
 __all__ = [
     "pairwise_dist", "gather_dist", "select_edges", "edge_scan_valid",
@@ -36,14 +41,19 @@ def pairwise_dist(q, x, metric="l2"):
 
 
 def gather_dist(q, table, ids, metric="l2"):
-    """q[B, d], table[n, d], ids int32[B, M] (-1 masked) -> f32[B, M].
+    """q[B, d], table[n, d] or a codec struct, ids int32[B, M] (-1 masked)
+    -> f32[B, M].
 
-    Distance from query b to table[ids[b, j]]; +inf where ids < 0. This is
-    the semantic contract of the fused gather-distance kernel; on non-TPU
-    backends it is also the production path (XLA gather + einsum).
+    Distance from query b to the decoded table[ids[b, j]]; +inf where
+    ids < 0. ``table`` may be a plain float table or a quantized codec
+    struct (``storage.Int8Vectors`` / ``storage.PQVectors``, DESIGN.md §9)
+    — rows decode to f32 through ``storage.decode_rows``, the contract the
+    kernels' in-VMEM dequant is pinned against. This is the semantic
+    contract of the fused gather-distance kernel; on non-TPU backends it is
+    also the production path (XLA gather + einsum).
     """
     q = q.astype(jnp.float32)
-    x = table[jnp.maximum(ids, 0)].astype(jnp.float32)  # [B, M, d]
+    x = _storage.decode_rows(table, jnp.maximum(ids, 0))  # [B, M, d] f32
     if metric == "l2":
         xx = jnp.sum(x * x, axis=-1)
         qq = jnp.sum(q * q, axis=-1, keepdims=True)
@@ -168,7 +178,9 @@ def hop(q, table, nbrs, u, L, R, visited, exp_ok, *, logn, m_out,
     newly-visited mask, the updated bitset) bit-identically, distances to
     f32 tolerance (bit-exactly under identical fusion).
 
-    q f32[B, d]; table [n, d] (f32/bf16); nbrs int32[n, layers, m]
+    q f32[B, d]; table [n, d] (f32/bf16) or a quantized codec struct
+    (``storage.Int8Vectors`` / ``storage.PQVectors``, decoded per-row via
+    :func:`gather_dist` — DESIGN.md §9); nbrs int32[n, layers, m]
     (pre-decoded); u int32[B, W] expansion frontier (-1 inactive);
     L/R int32[B*W] per-frontier-row ranges; visited uint32[B, words];
     exp_ok bool[B, W] which expansions are live.
@@ -197,9 +209,11 @@ def prune(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True):
 
     ``cand_ids`` int32[B, C] candidate ids into ``table`` (-1 invalid);
     ``cand_dists`` f32[B, C] squared distance to the chunk's node u (inf for
-    invalid slots); ``table`` f32[n, d] the full vector table. Returns
-    int32[B, m] pruned neighbor ids, -1 padded — the semantic contract of
-    the Pallas construction-prune kernel and the off-TPU production path.
+    invalid slots); ``table`` the full vector table — f32/bf16 ``[n, d]``
+    or a quantized codec struct (decoded per-row via
+    ``storage.decode_rows``, DESIGN.md §9). Returns int32[B, m] pruned
+    neighbor ids, -1 padded — the semantic contract of the Pallas
+    construction-prune kernel and the off-TPU production path.
 
     Matches ``core/rng.py::prune`` (the eager oracle) in kept ids but never
     materializes the ``[C, C]`` candidate-candidate distance matrix: the
@@ -216,7 +230,7 @@ def prune(cand_ids, cand_dists, table, *, m, alpha=1.0, fill=True):
     order matches the oracle's keep-then-fill key sort. O(m * C * d) work
     instead of O(C^2 * d), with only [C] live columns.
     """
-    vecs = table[jnp.maximum(cand_ids, 0)]                # [B, C, d]
+    vecs = _storage.decode_rows(table, jnp.maximum(cand_ids, 0))  # [B, C, d]
     return prune_vecs(
         cand_ids, cand_dists, vecs, m=m, alpha=alpha, fill=fill
     )

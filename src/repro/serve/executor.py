@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core import config as config_mod
 from repro.core import search as search_mod
+from repro.core import storage as storage_mod
 from repro.core.config import SearchConfig
 
 __all__ = ["SearchExecutor"]
@@ -77,10 +78,13 @@ class SearchExecutor:
                     f"batch_buckets {batch_buckets} must be non-empty and "
                     f"end at max_batch={self.max_batch}"
                 )
-        # the two hot tables, uploaded once (possibly compact dtypes —
-        # decode happens inside the jitted search, at the edge)
-        self._vec = jnp.asarray(index.vectors)
-        self._nbrs = jnp.asarray(index.neighbors)
+        # the hot tables, uploaded once per leaf (possibly codec structs —
+        # decode happens inside the jitted search / kernels, at the edge;
+        # NamedTuple codecs are pytrees, so their structure sits in the
+        # trace signature and the zero-post-warmup-compile guarantee holds)
+        self._vec = storage_mod.as_device(index.vectors)
+        self._nbrs = storage_mod.as_device(index.neighbors)
+        self._rerank = storage_mod.as_device(getattr(index, "rerank", None))
         if faults:
             from repro.serve import faults as faults_mod
 
@@ -125,7 +129,7 @@ class SearchExecutor:
         q = jnp.zeros((bb, d), jnp.float32)
         z = jnp.zeros((bb,), jnp.int32)
         lowered = search_mod._search_improvised_jit.lower(
-            self._vec, self._nbrs, q, z, z,
+            self._vec, self._nbrs, q, z, z, self._rerank,
             logn=self.index.logn, m_out=self.index.m, k=kb, config=cfg,
         )
         exe = lowered.compile()
@@ -220,7 +224,7 @@ class SearchExecutor:
         else:
             exe = self._compile(cfg, bb, kb)
         res = exe(self._vec, self._nbrs, jnp.asarray(q), jnp.asarray(L),
-                  jnp.asarray(R))
+                  jnp.asarray(R), self._rerank)
         self.stats["batches"] += 1
         self.stats["queries"] += B
         if bb == B:

@@ -1,0 +1,341 @@
+"""Quantized vector codecs end-to-end: laws, persistence, kernel parity.
+
+The contract under test (``core/storage.py`` + DESIGN.md §9): int8 and PQ
+vector tables decode *inside* the kernels (and inside ``kernels/ref.py``'s
+jnp contracts) from the narrow representation — the widened f32 table never
+exists in device memory — while all distance math stays f32. Persistence
+flattens the codec structs into named, crc32-checked payload fields
+(``vec_scales``, ``vec_codebook``, ``neighbors_lo``, ``rerank_scales``) so
+a bit flip in any sidecar is caught and NAMED at load time.
+"""
+import hashlib
+
+import msgpack
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import compressio
+from repro.core import (
+    BuildConfig, IndexCorruptionError, RangeGraphIndex, SearchConfig,
+    StorageConfig, recall,
+)
+from repro.core import storage as storage_mod
+from repro.kernels import ops, ref
+from repro.kernels.gather_distance import gather_distance_kernel_call
+
+
+# ---------------------------------------------------------------------------
+# codec laws
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    """Symmetric round-to-nearest: |decode(x) - x| <= scale/2 per element,
+    with scale = max|row| / 127."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 24)).astype(np.float32) * 3.0
+    x[7] = 0.0  # all-zero row must not divide by zero
+    enc = storage_mod.encode_vectors(x, StorageConfig.int8())
+    assert isinstance(enc, storage_mod.Int8Vectors)
+    assert enc.codes.dtype == np.int8
+    assert enc.scales.dtype == np.float32
+    dec = storage_mod.decode_vectors(enc)
+    assert dec.dtype == np.float32
+    bound = enc.scales[:, None] * 0.5 + 1e-6
+    assert (np.abs(dec - x) <= bound).all()
+    np.testing.assert_array_equal(dec[7], 0.0)
+    # footprint: d int8 + one f32 scale vs d f32
+    assert storage_mod.table_nbytes(enc) == x.shape[0] * (x.shape[1] + 4)
+
+
+def test_pq_roundtrip_reconstruction():
+    """PQ is lossy but must beat the trivial (all-zero) reconstruction by a
+    wide margin on clusterable data, and be deterministic per seed."""
+    rng = np.random.default_rng(1)
+    centers = rng.standard_normal((8, 32)).astype(np.float32) * 4
+    x = (centers[rng.integers(0, 8, 512)]
+         + rng.standard_normal((512, 32)).astype(np.float32) * 0.1)
+    enc = storage_mod.encode_vectors(x, StorageConfig.pq())
+    assert isinstance(enc, storage_mod.PQVectors)
+    assert enc.codes.dtype == np.uint8
+    M = storage_mod.resolve_pq_m(32)
+    assert enc.codebook.shape == (M, storage_mod.PQ_CENTROIDS, 32 // M)
+    dec = storage_mod.decode_vectors(enc)
+    assert dec.shape == x.shape and dec.dtype == np.float32
+    mse = ((dec - x) ** 2).mean()
+    assert mse < 0.25 * (x ** 2).mean()
+    enc2 = storage_mod.encode_vectors(x, StorageConfig.pq())
+    np.testing.assert_array_equal(enc2.codes, enc.codes)
+    np.testing.assert_array_equal(enc2.codebook, enc.codebook)
+
+
+def test_pq_m_validation():
+    with pytest.raises(ValueError, match="does not divide"):
+        storage_mod.resolve_pq_m(30, 7)
+    assert storage_mod.resolve_pq_m(32, 8) == 8
+    assert storage_mod.resolve_pq_m(32) == 8
+
+
+def test_decode_rows_matches_full_decode():
+    """``decode_rows(table, ids)`` — the jnp contract the refs and the
+    legacy prune use — must agree with gathering from the full decode."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((128, 16)).astype(np.float32)
+    ids = jnp.asarray(rng.integers(0, 128, (4, 9)).astype(np.int32))
+    for cfg in (StorageConfig.int8(), StorageConfig.pq()):
+        enc = storage_mod.encode_vectors(x, cfg)
+        dev = storage_mod.as_device(enc)
+        want = storage_mod.decode_vectors(enc)[np.asarray(ids)]
+        got = np.asarray(storage_mod.decode_rows(dev, ids))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# index threading
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def codec_indexes():
+    rng = np.random.default_rng(5)
+    n, d = 1024, 32
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    cfg = BuildConfig(m=8, ef_construction=32, brute_threshold=32)
+    idx32 = RangeGraphIndex.build(vectors, attrs, cfg,
+                                  storage=StorageConfig())
+    idx8 = idx32.astype_storage(StorageConfig.int8())
+    idxpq = idx32.astype_storage(StorageConfig.pq())
+    return idx32, idx8, idxpq, rng
+
+
+def test_int8_index_footprint(codec_indexes):
+    idx32, idx8, _, _ = codec_indexes
+    assert isinstance(idx8.vectors, storage_mod.Int8Vectors)
+    assert isinstance(idx8.neighbors, storage_mod.SplitNeighbors)
+    assert idx8.rerank is None
+    assert idx8.nbytes <= 0.40 * idx32.nbytes
+
+
+def test_pq_index_footprint(codec_indexes):
+    idx32, _, idxpq, _ = codec_indexes
+    assert isinstance(idxpq.vectors, storage_mod.PQVectors)
+    # navigation tables alone (codes + codebook + split ids + attrs) must
+    # undercut int8; the int8 rerank sidecar rides on top
+    nav = (storage_mod.table_nbytes(idxpq.vectors)
+           + storage_mod.table_nbytes(idxpq.neighbors)
+           + idxpq.attrs.nbytes)
+    assert nav <= 0.35 * idx32.nbytes
+    assert isinstance(idxpq.rerank, storage_mod.Int8Vectors)
+    assert idxpq.nbytes <= 0.55 * idx32.nbytes
+
+
+def test_split_neighbors_decode_exact(codec_indexes):
+    """Segment-offset neighbor ids are a lossless codec on a real table."""
+    idx32, idx8, _, _ = codec_indexes
+    dec = storage_mod.decode_neighbors(idx8.neighbors)
+    np.testing.assert_array_equal(np.asarray(dec), idx32.neighbors)
+
+
+def test_rerank_recall_floor(codec_indexes):
+    """PQ navigation + exact-sidecar rerank must recover the recall the
+    lossy codes give up: rerank recall may not trail the no-rerank PQ
+    search, and must land within 0.02 of the f32 baseline."""
+    idx32, _, idxpq, rng = codec_indexes
+    B, k = 32, 10
+    q = rng.standard_normal((B, idx32.dim)).astype(np.float32)
+    L = np.zeros(B, np.int32)
+    R = np.full(B, idx32.n - 1, np.int32)
+    gt, _ = idx32.brute_force(q, L, R, k=k)
+    plain = SearchConfig(ef=64)
+    rr = SearchConfig(ef=64, rerank=48)
+    r32 = recall(np.asarray(idx32.search_ranks(q, L, R, k=k,
+                                               config=plain).ids), gt)
+    rpq = recall(np.asarray(idxpq.search_ranks(q, L, R, k=k,
+                                               config=plain).ids), gt)
+    rrr = recall(np.asarray(idxpq.search_ranks(q, L, R, k=k,
+                                               config=rr).ids), gt)
+    assert rrr >= rpq - 1e-9
+    assert rrr >= r32 - 0.02
+
+
+def test_int8_recall_close_to_f32(codec_indexes):
+    idx32, idx8, _, rng = codec_indexes
+    B, k = 32, 10
+    q = rng.standard_normal((B, idx32.dim)).astype(np.float32)
+    L = np.zeros(B, np.int32)
+    R = np.full(B, idx32.n - 1, np.int32)
+    gt, _ = idx32.brute_force(q, L, R, k=k)
+    cfg = SearchConfig(ef=64)
+    r32 = recall(np.asarray(idx32.search_ranks(q, L, R, k=k,
+                                               config=cfg).ids), gt)
+    r8 = recall(np.asarray(idx8.search_ranks(q, L, R, k=k,
+                                             config=cfg).ids), gt)
+    assert r8 >= r32 - 0.02
+
+
+def test_degenerate_ranges_under_int8_env(monkeypatch):
+    """REPRO_STORAGE=int8 build + empty / single-element ranges with
+    expand_width > 1 through the full engine (the CI storage leg's shape)."""
+    monkeypatch.setenv("REPRO_STORAGE", "int8")
+    rng = np.random.default_rng(11)
+    n, d = 256, 16
+    vectors = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0, 100, n)
+    idx = RangeGraphIndex.build(
+        vectors, attrs, BuildConfig(m=8, ef_construction=32,
+                                    brute_threshold=32))
+    assert isinstance(idx.vectors, storage_mod.Int8Vectors)
+    q = rng.standard_normal((4, d)).astype(np.float32)
+    cfg = SearchConfig(ef=16, expand_width=2)
+    # empty ranges: all padding, zero hops
+    L = np.array([10, 100, 255, 1], np.int32)
+    res = idx.search_ranks(q, L, L - 1, k=5, config=cfg)
+    assert (np.asarray(res.ids) == -1).all()
+    assert (np.asarray(res.n_hops) == 0).all()
+    # single-element ranges: the element itself, at its int8-decoded dist
+    L = np.array([0, 17, 128, 255], np.int32)
+    res = idx.search_ranks(q, L, L, k=4, config=cfg)
+    ids = np.asarray(res.ids)
+    np.testing.assert_array_equal(ids[:, 0], L)
+    assert (ids[:, 1:] == -1).all()
+    dec = storage_mod.decode_vectors(idx.vectors)
+    want = ((dec[L] - q) ** 2).sum(1)
+    np.testing.assert_allclose(np.asarray(res.dists)[:, 0], want,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: fused in-kernel decode vs the jnp contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [StorageConfig.int8(), StorageConfig.pq()],
+                         ids=["int8", "pq"])
+def test_gather_dist_kernel_decodes_in_vmem(cfg):
+    """Pallas gather+distance on a codec table vs ``ref.gather_dist`` on
+    the same struct: identical inf/pad structure, f32-tolerance values."""
+    rng = np.random.default_rng(3)
+    B, n, d, M = 4, 128, 32, 9
+    q = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    table = storage_mod.as_device(storage_mod.encode_vectors(
+        rng.standard_normal((n, d)).astype(np.float32), cfg))
+    ids = jnp.asarray(rng.integers(-1, n, (B, M)).astype(np.int32))
+    want = np.asarray(ref.gather_dist(q, table, ids))
+    got = np.asarray(gather_distance_kernel_call(q, table, ids,
+                                                 interpret=True))
+    assert (np.isinf(got) == np.isinf(want)).all()
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", [StorageConfig.int8(), StorageConfig.pq()],
+                         ids=["int8", "pq"])
+def test_prune_codec_table_backend_parity(cfg):
+    """Construction prune on a codec table: xla / pallas / legacy must keep
+    the same ids (the decode happens in-kernel for pallas, via
+    ``decode_rows`` for the jnp paths)."""
+    rng = np.random.default_rng(7)
+    B, C, d, n, m = 4, 12, 16, 64, 4
+    table = storage_mod.as_device(storage_mod.encode_vectors(
+        rng.standard_normal((n, d)).astype(np.float32), cfg))
+    dec = storage_mod.decode_vectors(table)
+    ids = rng.integers(0, n, (B, C)).astype(np.int32)
+    ids[rng.random((B, C)) < 0.2] = -1
+    # external query points (not table rows): keep decisions away from the
+    # f32-reassociation near-ties a self-distance fixture manufactures
+    u = rng.standard_normal((B, d)).astype(np.float32)
+    du = ((dec[np.maximum(ids, 0)] - u[:, None, :]) ** 2).sum(-1)
+    du = np.where(ids < 0, np.inf, du).astype(np.float32)
+    want = np.asarray(ops.prune(
+        jnp.asarray(ids), jnp.asarray(du), table, m=m, impl="xla"))
+    for impl in ("pallas", "legacy"):
+        got = np.asarray(ops.prune(
+            jnp.asarray(ids), jnp.asarray(du), table, m=m, impl=impl))
+        np.testing.assert_array_equal(got, want, err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# persistence: codec sidecars are named, checksummed payload fields
+# ---------------------------------------------------------------------------
+
+def _read_payload(path):
+    with open(path, "rb") as f:
+        outer = msgpack.unpackb(compressio.decompress(f.read()))
+    return msgpack.unpackb(outer["payload"])
+
+
+def _flip_field(src, dst, field):
+    payload = _read_payload(src)
+    data = bytearray(payload[field]["data"])
+    data[len(data) // 2] ^= 0x40
+    payload[field]["data"] = bytes(data)
+    raw = msgpack.packb(payload)
+    blob = msgpack.packb(
+        {"sha256": hashlib.sha256(raw).hexdigest(), "payload": raw})
+    with open(dst, "wb") as f:
+        f.write(compressio.compress(blob, level=3))
+
+
+@pytest.fixture(scope="module")
+def saved_codecs(codec_indexes, tmp_path_factory):
+    _, idx8, idxpq, _ = codec_indexes
+    root = tmp_path_factory.mktemp("codecs")
+    p8, ppq = str(root / "int8.bin"), str(root / "pq.bin")
+    idx8.save(p8)
+    idxpq.save(ppq)
+    return p8, ppq
+
+
+def test_save_load_roundtrip_int8(codec_indexes, saved_codecs):
+    _, idx8, _, _ = codec_indexes
+    loaded = RangeGraphIndex.load(saved_codecs[0])
+    np.testing.assert_array_equal(loaded.vectors.codes, idx8.vectors.codes)
+    np.testing.assert_array_equal(loaded.vectors.scales, idx8.vectors.scales)
+    np.testing.assert_array_equal(loaded.neighbors.hi, idx8.neighbors.hi)
+    np.testing.assert_array_equal(loaded.neighbors.lo, idx8.neighbors.lo)
+    assert loaded.rerank is None
+
+
+def test_save_load_roundtrip_pq(codec_indexes, saved_codecs):
+    _, _, idxpq, _ = codec_indexes
+    loaded = RangeGraphIndex.load(saved_codecs[1])
+    np.testing.assert_array_equal(loaded.vectors.codes, idxpq.vectors.codes)
+    np.testing.assert_array_equal(loaded.vectors.codebook,
+                                  idxpq.vectors.codebook)
+    np.testing.assert_array_equal(loaded.rerank.codes, idxpq.rerank.codes)
+    np.testing.assert_array_equal(loaded.rerank.scales, idxpq.rerank.scales)
+    assert loaded.nbytes == idxpq.nbytes
+
+
+@pytest.mark.parametrize("which,field", [
+    ("int8", "vectors"),
+    ("int8", "vec_scales"),
+    ("int8", "neighbors_lo"),
+    ("pq", "vec_codebook"),
+    ("pq", "rerank"),
+    ("pq", "rerank_scales"),
+])
+def test_codec_bit_flip_names_the_field(saved_codecs, tmp_path, which, field):
+    src = saved_codecs[0] if which == "int8" else saved_codecs[1]
+    bad = str(tmp_path / f"flip_{which}_{field}.bin")
+    _flip_field(src, bad, field)
+    with pytest.raises(IndexCorruptionError, match="checksum mismatch") \
+            as ei:
+        RangeGraphIndex.load(bad)
+    assert ei.value.field == field
+    assert field in str(ei.value)
+
+
+def test_loaded_codec_index_searches(codec_indexes, saved_codecs):
+    """A reloaded PQ index (struct tables + rerank sidecar) answers
+    queries identically to the in-memory one."""
+    _, _, idxpq, rng = codec_indexes
+    loaded = RangeGraphIndex.load(saved_codecs[1])
+    q = rng.standard_normal((6, idxpq.dim)).astype(np.float32)
+    L = np.zeros(6, np.int32)
+    R = np.full(6, idxpq.n - 1, np.int32)
+    cfg = SearchConfig(ef=32, rerank=16)
+    a = idxpq.search_ranks(q, L, R, k=5, config=cfg)
+    b = loaded.search_ranks(q, L, R, k=5, config=cfg)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import BuildConfig, RangeGraphIndex, recall
+from repro.core import storage as storage_mod
 
 EDGE_IMPLS = ("xla", "argsort", "pallas")
 
@@ -49,7 +50,10 @@ def test_single_element_range(small_index, edge_impl):
     ids = np.asarray(res.ids)
     np.testing.assert_array_equal(ids[:, 0], L)   # the element itself
     assert (ids[:, 1:] == -1).all()               # nothing else exists
-    want = ((idx.vectors[L] - q) ** 2).sum(1)
+    # decode first: under the CI storage legs idx.vectors may be a codec
+    # struct (bf16 array or Int8Vectors) rather than an indexable f32 table
+    vecs = storage_mod.decode_vectors(idx.vectors)
+    want = ((vecs[L] - q) ** 2).sum(1)
     np.testing.assert_allclose(
         np.asarray(res.dists)[:, 0], want, rtol=1e-5, atol=1e-5
     )

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import BuildConfig, RangeGraphIndex, bitset, edge_select, recall
 from repro.core import search as search_mod
+from repro.core import storage as storage_mod
 from repro.core import search_ref
 from repro.kernels import ref
 from repro.kernels.distance import pairwise_dist_kernel_call
@@ -201,8 +202,12 @@ def test_expand_width1_bit_identical_to_reference(small_index):
             vec, qj, entries, nbr_fn, ef=ef, k=k
         )
 
+    # decode for the reference: under the CI storage legs the engine reads
+    # codec tables (bf16 / Int8Vectors / SplitNeighbors) and expands them
+    # to exactly these f32 values in its own distance path
     want = ref_search(
-        jnp.asarray(idx.vectors), jnp.asarray(idx.neighbors),
+        jnp.asarray(storage_mod.decode_vectors(idx.vectors)),
+        jnp.asarray(storage_mod.decode_neighbors(idx.neighbors)),
         jnp.asarray(q), jnp.asarray(L), jnp.asarray(R), ef=48, k=10,
     )
     np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
@@ -225,8 +230,12 @@ def test_expand_width1_bit_identical_filtered(small_index):
     L = rng.integers(0, n // 2, B).astype(np.int32)
     R = (L + 128).astype(np.int32)
 
+    # both sides read the same decoded f32 tables: this test pins the
+    # two-list traversal against the seed engine, not the storage codec
+    vec = jnp.asarray(storage_mod.decode_vectors(idx.vectors))
+    nbrs_dec = jnp.asarray(storage_mod.decode_neighbors(idx.neighbors))
     got = search_mod.search_filtered(
-        jnp.asarray(idx.vectors), jnp.asarray(idx.neighbors),
+        vec, nbrs_dec,
         jnp.asarray(q), jnp.asarray(L), jnp.asarray(R),
         mode="post", ef=48, k=10, expand_width=1, dist_impl="xla",
     )
@@ -249,7 +258,7 @@ def test_expand_width1_bit_identical_filtered(small_index):
         )
 
     want = ref_search(
-        jnp.asarray(idx.vectors), jnp.asarray(idx.neighbors),
+        vec, nbrs_dec,
         jnp.asarray(q), jnp.asarray(L), jnp.asarray(R), ef=48, k=10,
     )
     np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))

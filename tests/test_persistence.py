@@ -18,7 +18,9 @@ import numpy as np
 import pytest
 
 from repro import compressio
-from repro.core import BuildConfig, IndexCorruptionError, RangeGraphIndex
+from repro.core import (
+    BuildConfig, IndexCorruptionError, RangeGraphIndex, StorageConfig,
+)
 
 
 @pytest.fixture(scope="module")
@@ -27,9 +29,14 @@ def saved(tmp_path_factory):
     n, d = 128, 8
     vectors = rng.standard_normal((n, d)).astype(np.float32)
     attrs = rng.uniform(0, 10, n)
+    # pin f32 storage: these tests target the integrity envelope and its
+    # canonical field set regardless of the CI REPRO_STORAGE leg; the
+    # codec sidecar fields have their own corruption tests
+    # (tests/test_codecs.py)
     idx = RangeGraphIndex.build(
         vectors, attrs, BuildConfig(m=4, ef_construction=16,
-                                    brute_threshold=16)
+                                    brute_threshold=16),
+        storage=StorageConfig(),
     )
     path = tmp_path_factory.mktemp("persist") / "index.bin"
     idx.save(str(path))

@@ -5,6 +5,7 @@ from _hypo import given, settings, st
 
 from repro.core import BuildConfig, RangeGraphIndex, recall
 from repro.core import baselines, multiattr
+from repro.core import storage as storage_mod
 
 
 @pytest.fixture(scope="module")
@@ -19,14 +20,17 @@ def small_index():
 
 def test_build_invariants(small_index):
     idx, _ = small_index
-    n, layers, m = idx.neighbors.shape
+    # decode first: under the CI storage legs the neighbor table may be a
+    # codec (int16 array or SplitNeighbors struct) rather than raw int32
+    nbrs = np.asarray(storage_mod.decode_neighbors(idx.neighbors))
+    n, layers, m = nbrs.shape
     assert n == 512 and m == 8 and layers == idx.logn + 1
     # every edge stays inside its layer's segment and points to a real node
     for lay in range(layers):
         s = idx.logn - lay
         lo = (np.arange(n) >> s) << s
         hi = lo + (1 << s) - 1
-        nb = idx.neighbors[:, lay, :]
+        nb = nbrs[:, lay, :]
         ok = nb < 0
         inseg = (nb >= lo[:, None]) & (nb <= hi[:, None]) & (nb < n)
         assert (ok | inseg).all(), f"edge out of segment at layer {lay}"
@@ -109,7 +113,10 @@ def test_build_chunk_size_invariant():
     small = RangeGraphIndex.build(
         vectors, attrs, BuildConfig(**base, chunk=64)
     )
-    np.testing.assert_array_equal(big.neighbors, small.neighbors)
+    np.testing.assert_array_equal(
+        np.asarray(storage_mod.decode_neighbors(big.neighbors)),
+        np.asarray(storage_mod.decode_neighbors(small.neighbors)),
+    )
 
 
 def test_save_load_roundtrip(tmp_path, small_index):
@@ -117,8 +124,14 @@ def test_save_load_roundtrip(tmp_path, small_index):
     p = str(tmp_path / "index.rg")
     idx.save(p)
     idx2 = RangeGraphIndex.load(p)
-    np.testing.assert_array_equal(idx.neighbors, idx2.neighbors)
-    np.testing.assert_array_equal(idx.vectors, idx2.vectors)
+    np.testing.assert_array_equal(
+        np.asarray(storage_mod.decode_neighbors(idx.neighbors)),
+        np.asarray(storage_mod.decode_neighbors(idx2.neighbors)),
+    )
+    np.testing.assert_array_equal(
+        storage_mod.decode_vectors(idx.vectors),
+        storage_mod.decode_vectors(idx2.vectors),
+    )
     q = rng.standard_normal((4, idx.dim)).astype(np.float32)
     L = np.array([10, 20, 30, 40], np.int32)
     R = np.array([200, 210, 220, 230], np.int32)
