@@ -45,6 +45,7 @@ import jax.numpy as jnp
 
 from common import artifacts_dir, carry_smoke_ref, time_it, update_smoke_ref
 from repro.core import build as build_mod
+from repro.core import knobs as knobs_mod
 from repro.kernels import ops
 
 
@@ -219,9 +220,7 @@ def main(argv=None):
         # search levels floor at _SEARCH_CHUNK_FLOOR — report what the
         # build actually uses, not the raw budget math
         "auto_chunk": {
-            "budget_mb": int(os.environ.get(
-                "REPRO_CHUNK_BUDGET_MB", build_mod._DEFAULT_CHUNK_BUDGET_MB
-            )),
+            "budget_mb": knobs_mod.get_int("REPRO_CHUNK_BUDGET_MB"),
             "search": build_mod.resolve_chunk(
                 build_mod.BuildConfig(), args.m + args.efc, args.d,
                 floor=build_mod._SEARCH_CHUNK_FLOOR),

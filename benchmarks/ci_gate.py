@@ -367,6 +367,43 @@ def _check_slo(smoke, committed, name, args, errors, warnings):
                 print("ok:", line)
 
 
+# The replint findings baseline (lint_baseline.json, DESIGN.md §10) may
+# only ever SHRINK: every entry is a justified, fenced violation (the
+# seed-vestigial module fence), and new findings must be fixed or
+# argued into the baseline in review — at which point this constant
+# moves in the same commit, making growth a reviewable act instead of
+# an accretion.
+MAX_LINT_BASELINE_ENTRIES = 33
+
+
+def _check_lint_baseline(errors):
+    path = os.path.join(os.path.dirname(ARTIFACTS), "lint_baseline.json")
+    if not os.path.exists(path):
+        errors.append("lint_baseline.json: missing (replint baseline)")
+        return
+    try:
+        with open(path, encoding="utf-8") as f:
+            entries = json.load(f).get("entries", [])
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"lint_baseline.json: unparseable ({e})")
+        return
+    if len(entries) > MAX_LINT_BASELINE_ENTRIES:
+        errors.append(
+            f"lint_baseline.json grew to {len(entries)} entries "
+            f"(max {MAX_LINT_BASELINE_ENTRIES}): fix the new findings "
+            f"instead of baselining them, or justify the growth by "
+            f"raising MAX_LINT_BASELINE_ENTRIES in this file in the "
+            f"same commit"
+        )
+    for e in entries:
+        if not str(e.get("reason", "")).strip():
+            errors.append(
+                f"lint_baseline.json: entry {e.get('key')!r} has no "
+                f"reason — every baselined finding carries a one-line "
+                f"justification"
+            )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance", type=float, default=0.25,
@@ -404,6 +441,8 @@ def main(argv=None):
 
     errors: list[str] = []
     warnings: list[str] = []
+
+    _check_lint_baseline(errors)
 
     for (committed_name, smoke_name), keys in GATES.items():
         committed = _load(os.path.join(ARTIFACTS, committed_name), errors)

@@ -5,6 +5,11 @@ package is available and fall back to stdlib ``zlib`` otherwise (this
 container does not ship zstd bindings). Reads auto-detect the codec from the
 frame magic, so artifacts written under one codec load under the other
 environment as long as the writer's codec is importable.
+
+The default compression level comes from the ``REPRO_COMPRESS_LEVEL`` knob
+(``core/knobs.py`` registry, default 3) so deployments can trade write
+latency for blob size without touching call sites; an explicit ``level=``
+argument wins.
 """
 from __future__ import annotations
 
@@ -15,12 +20,16 @@ try:
 except ImportError:  # pragma: no cover - depends on the environment
     zstandard = None
 
+from repro.core import knobs as knobs_mod
+
 __all__ = ["compress", "decompress"]
 
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
-def compress(data: bytes, level: int = 3) -> bytes:
+def compress(data: bytes, level: int | None = None) -> bytes:
+    if level is None:
+        level = knobs_mod.get_int("REPRO_COMPRESS_LEVEL")
     if zstandard is not None:
         return zstandard.ZstdCompressor(level=level).compress(data)
     return zlib.compress(data, level)

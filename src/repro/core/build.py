@@ -26,13 +26,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import knobs as knobs_mod
 from repro.core import search as search_mod
 from repro.core import storage as storage_mod
 from repro.core.config import SearchConfig
@@ -59,9 +59,9 @@ class BuildConfig:
 # The gathered candidate block a chunked prune re-reads once per keep sweep
 # is [chunk, C, d] f32; past cache residency the lazy-column win decays
 # (2.3x -> 1.8x on the dev host, BENCH_build.json chunk sweep), so the
-# auto-tuner sizes the chunk against this budget. REPRO_CHUNK_BUDGET_MB
-# overrides for hosts with different cache hierarchies.
-_DEFAULT_CHUNK_BUDGET_MB = 16
+# auto-tuner sizes the chunk against this budget. The REPRO_CHUNK_BUDGET_MB
+# knob (default 16, core/knobs.py registry) overrides for hosts with
+# different cache hierarchies.
 _CHUNK_MIN, _CHUNK_MAX = 256, 8192
 # Search levels interleave the prune with a batched sibling beam search
 # (one search_fixed_layer call per chunk) whose cost amortizes with batch
@@ -75,9 +75,7 @@ def auto_chunk(C: int, d: int, *, budget_bytes: int | None = None) -> int:
     ``[chunk, C, d]`` f32 candidate block inside the cache budget, clamped
     to [256, 8192]. ``BuildConfig.chunk`` overrides (see resolve_chunk)."""
     if budget_bytes is None:
-        budget_bytes = int(
-            os.environ.get("REPRO_CHUNK_BUDGET_MB", _DEFAULT_CHUNK_BUDGET_MB)
-        ) << 20
+        budget_bytes = knobs_mod.get_int("REPRO_CHUNK_BUDGET_MB") << 20
     per_row = max(int(C) * int(d) * 4, 1)
     target = max(budget_bytes // per_row, 1)
     p = 1

@@ -1,0 +1,282 @@
+"""Typed registry for every ``REPRO_*`` environment knob.
+
+Every env knob the repo reads is declared here once — name, type, default,
+accepted values, one-line doc, and which layer consumes it — and read
+through the typed accessors (:func:`get_str` / :func:`get_int` /
+:func:`get_float` / :func:`get_bool` / :func:`get_list`). Two contracts
+hang off the registry, both machine-checked by the repo linter
+(``python -m repro.lint``, DESIGN.md §10):
+
+  * **R1 knob-registry**: no ``os.environ`` / ``os.getenv`` access with a
+    ``REPRO_*`` key exists anywhere outside this module — reading an
+    unregistered knob raises ``KeyError`` here, so a knob cannot exist
+    without a declared type, default and doc line;
+  * **KNOBS.md generation**: ``docs/KNOBS.md`` is generated from
+    :func:`generate_markdown` (``python -m repro.lint --write-knobs``) and
+    R1 fails when the committed file drifts from the registry.
+
+Accessors read the environment *at call time* (no import-time caching), so
+tests and CI legs that monkeypatch ``os.environ`` keep working; pass an
+explicit ``env`` mapping to resolve against something else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+__all__ = [
+    "Knob", "REGISTRY", "get", "raw", "get_str", "get_int", "get_float",
+    "get_bool", "get_list", "generate_markdown",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """One registered environment knob (a row of docs/KNOBS.md)."""
+
+    name: str            # the REPRO_* variable
+    type: str            # "str" | "int" | "float" | "bool" | "list"
+    default: object      # value the typed accessor returns when unset
+    values: str          # human-readable accepted values (doc table cell)
+    doc: str             # one-line effect description (doc table cell)
+    section: str         # doc section key (see _SECTIONS)
+    consumed_by: str = ""  # which layer reads it (dispatch table only)
+
+    def __post_init__(self):
+        if not self.name.startswith("REPRO_"):
+            raise ValueError(f"knob {self.name!r} must start with REPRO_")
+        if self.type not in ("str", "int", "float", "bool", "list"):
+            raise ValueError(f"knob {self.name}: unknown type {self.type!r}")
+
+
+REGISTRY: tuple[Knob, ...] = (
+    # -- kernel dispatch (DESIGN.md §3/§4; consumed in kernels/ops.py) ------
+    Knob("REPRO_IMPL", "str", None, "`xla`, `pallas`",
+         "every `auto` dispatch at once", "dispatch",
+         "`ops.py::default_impl` (DESIGN.md §3/§4)"),
+    Knob("REPRO_DIST_IMPL", "str", None, "`xla`, `pallas`",
+         "gather+distance only", "dispatch", "`ops.gather_dist`"),
+    Knob("REPRO_EDGE_IMPL", "str", None, "`xla`, `argsort`, `pallas`",
+         "edge selection only", "dispatch", "`ops.select_edges` (§2)"),
+    Knob("REPRO_PRUNE_IMPL", "str", None, "`xla`, `pallas`, `legacy`",
+         "construction prune only", "dispatch", "`ops.prune` (§4)"),
+    Knob("REPRO_HOP_IMPL", "str", None, "`pallas`, `xla`, `composed`",
+         "the whole-hop megakernel", "dispatch", "`ops.hop` (§3)"),
+    Knob("REPRO_FLASH_IMPL", "str", None, "`xla`, `pallas`",
+         "flash attention only", "dispatch", "`ops.flash_attention`"),
+    # -- storage codecs (core/storage.py::default_config) -------------------
+    Knob("REPRO_STORAGE", "str", None,
+         "`f32` (default), `compact`, `f16`, `int8`, `pq`",
+         "moves `storage_mod.default_config()`, i.e. the `StorageConfig` "
+         "every build uses when the caller passes `storage=None`",
+         "storage"),
+    # -- serving (serve/executor.py, serve/faults.py) -----------------------
+    Knob("REPRO_SERVE_WARMUP", "bool", False, "unset / `1`",
+         "every newly built `SearchExecutor` / `ServingEngine` AOT-compiles "
+         "its full `configs × batch_buckets × k_buckets` grid at "
+         "construction (DESIGN.md §7); after warmup, a compile is a test "
+         "failure", "serve"),
+    Knob("REPRO_FAULTS", "list", (),
+         "comma list of `latency`, `flush_error`, `queue_full`",
+         "activates fault injection in `AsyncServingEngine` "
+         "(`serve/loop.py` picks env faults up by default; the sync "
+         "engine/executor only with explicit opt-in) — the CI chaos leg "
+         "(§8)", "serve"),
+    Knob("REPRO_FAULT_LATENCY_S", "float", 0.02, "float, default `0.02`",
+         "injected latency spike duration", "serve"),
+    Knob("REPRO_FAULT_LATENCY_RATE", "float", 0.25, "float, default `0.25`",
+         "fraction of flushes hit by a latency spike", "serve"),
+    Knob("REPRO_FAULT_FLUSH_ERROR_RATE", "float", 0.25, "float",
+         "fraction of flushes that raise", "serve"),
+    Knob("REPRO_FAULT_QUEUE_FULL_RATE", "float", 0.25, "float",
+         "fraction of admissions rejected as queue-full", "serve"),
+    Knob("REPRO_FAULT_SEED", "int", 0, "int",
+         "deterministic fault schedule", "serve"),
+    # -- build (core/build.py) ----------------------------------------------
+    Knob("REPRO_CHUNK_BUDGET_MB", "int", 16, "int, default `16`",
+         "cache-residency budget the construction-prune chunk auto-tuner "
+         "sizes its `[chunk, C, d]` candidate block against "
+         "(`core/build.py`; clamped to [256, 8192] rows). "
+         "`BuildConfig.chunk` overrides per build", "build"),
+    # -- io / harness -------------------------------------------------------
+    Knob("REPRO_COMPRESS_LEVEL", "int", 3, "int, default `3`",
+         "compression level for checkpoint / serialized-index blobs "
+         "(`compressio.py`; zstd when available, zlib fallback). Callers "
+         "passing an explicit `level=` win", "io"),
+    Knob("REPRO_DRYRUN_DEVICES", "int", 512, "int, default `512`",
+         "host-platform placeholder device count the multi-pod dry-run "
+         "(`launch/dryrun.py`) forces via `XLA_FLAGS` before jax "
+         "initializes — enough for the 2x16x16 mesh by default", "io"),
+)
+
+_BY_NAME = {k.name: k for k in REGISTRY}
+
+_TRUE_FALSE = {"0": False, "false": False, "no": False, "off": False}
+
+
+def get(name: str) -> Knob:
+    """The registered :class:`Knob`, or ``KeyError`` naming the contract."""
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"{name!r} is not a registered knob: declare it in "
+            f"repro.core.knobs.REGISTRY (the R1 knob-registry contract, "
+            f"DESIGN.md §10) and regenerate docs/KNOBS.md"
+        ) from None
+
+
+def raw(name: str, env=None) -> str | None:
+    """The raw env string for a *registered* knob (``None`` when unset)."""
+    knob = get(name)
+    source = os.environ if env is None else env
+    return source.get(knob.name)
+
+
+def get_str(name: str, env=None) -> str | None:
+    """Raw string value, or the registered default when unset.
+
+    Deliberately does NOT strip/normalize — token validation (and the
+    empty-string-means-unset convention for CI matrix legs) belongs to the
+    consumer, exactly as with a raw ``os.environ.get``.
+    """
+    v = raw(name, env)
+    return _BY_NAME[name].default if v is None else v
+
+
+def get_int(name: str, env=None) -> int:
+    v = raw(name, env)
+    if v is None or not v.strip():
+        return int(_BY_NAME[name].default)
+    return int(v)
+
+
+def get_float(name: str, env=None) -> float:
+    v = raw(name, env)
+    if v is None or not v.strip():
+        return float(_BY_NAME[name].default)
+    return float(v)
+
+
+def get_bool(name: str, env=None) -> bool:
+    """Unset / empty -> default; `0`/`false`/`no`/`off` -> False; else True."""
+    v = raw(name, env)
+    if v is None or not v.strip():
+        return bool(_BY_NAME[name].default)
+    return _TRUE_FALSE.get(v.strip().lower(), True)
+
+
+def get_list(name: str, env=None) -> tuple[str, ...]:
+    """Comma-separated list knob -> tuple of stripped non-empty tokens."""
+    v = raw(name, env)
+    if v is None:
+        return tuple(_BY_NAME[name].default)
+    return tuple(t.strip() for t in v.split(",") if t.strip())
+
+
+# ---------------------------------------------------------------------------
+# docs/KNOBS.md generation
+# ---------------------------------------------------------------------------
+
+_HEADER = """\
+<!-- GENERATED FILE — do not edit by hand.
+     Source of truth: src/repro/core/knobs.py::REGISTRY.
+     Regenerate with: PYTHONPATH=src python -m repro.lint --write-knobs
+     (R1 of `python -m repro.lint` fails when this file drifts.) -->
+
+# KNOBS — every `REPRO_*` environment variable
+
+One page for every environment knob the repo reads, what values it takes,
+and which layer consumes it. These are *deployment/CI* hooks — the
+programmatic way to set the same things is `SearchConfig` /
+`StorageConfig` / `BuildConfig` arguments, which always win where both
+exist (see precedence below). Every knob flows through the typed registry
+`src/repro/core/knobs.py` (name, type, default, doc — this file is
+generated from it). Cross-references point into [DESIGN.md](../DESIGN.md).
+"""
+
+_SECTIONS: tuple[tuple[str, str, str], ...] = (
+    ("dispatch", "Kernel dispatch", """\
+Every hot-path op in `src/repro/kernels/ops.py` takes an `impl` argument
+that defaults to `"auto"` (pallas on TPU, xla elsewhere). The env knobs
+force a backend without touching call sites — the hook the CI
+kernel-backends matrix uses.
+"""),
+    ("storage", "Storage codecs", ""),
+    ("serve", "Serving", ""),
+    ("build", "Build", ""),
+    ("io", "IO / harness", ""),
+)
+
+_DISPATCH_FOOTER = """\
+**Precedence.** Per-call `impl=` argument (when not `"auto"`) beats
+`REPRO_<OP>_IMPL`, which beats the global `REPRO_IMPL`, which beats the
+platform auto. Unknown tokens raise (never a silent fallback), and a
+token that only exists for one op — e.g. `legacy` (prune), `argsort`
+(edge selection) — is rejected by the others even via the global knob.
+
+**The hop → composed resolution.** `ops.hop` is deliberately asymmetric:
+the global `REPRO_IMPL` does *not* engage the fused hop megakernel.
+`REPRO_IMPL=pallas` resolves the hop to `composed` — the three-op chain
+(select_edges → gather_dist → beam merge) with each inner op's `auto`
+forced to pallas — so the per-op CI legs still exercise the individual
+kernels. Only an explicit `REPRO_HOP_IMPL=pallas` (or TPU auto) runs the
+single-launch megakernel; it also wins over `REPRO_IMPL`. A hop with
+non-default per-op impls likewise routes through `composed` so those
+knobs keep meaning something.
+"""
+
+_STORAGE_FOOTER = """\
+`compact` = bf16 vectors + auto-narrow (int16/int32) neighbor ids
+(DESIGN.md §storage). `f16` = same with float16 vectors (faster on CPU
+hosts where bf16 is emulated). `int8` = per-vector scaled int8 + split
+segment-offset neighbor ids (§9, ~0.33 of f32). `pq` = product-quantized
+navigation vectors + split offsets + an int8 rerank sidecar (§9, ~0.27
+nav / ~0.4 total) — pair with `SearchConfig(rerank=...)` to hold recall.
+An explicit `storage=StorageConfig(...)` argument always wins over the
+env. Unknown tokens raise.
+"""
+
+_CI_FOOTER = """\
+## Where CI sets these
+
+The kernel-backends matrix (`.github/workflows/ci.yml`) runs the
+kernel-touching suites under: `REPRO_IMPL=xla`, `REPRO_IMPL=pallas`,
+`REPRO_IMPL=xla REPRO_STORAGE=compact`, `REPRO_IMPL=xla
+REPRO_STORAGE=int8`, `REPRO_IMPL=pallas REPRO_STORAGE=compact
+REPRO_SERVE_WARMUP=1`, and `REPRO_IMPL=xla
+REPRO_FAULTS=latency,flush_error`; a separate job runs
+`REPRO_HOP_IMPL=pallas` on a narrower suite (the interpreted megakernel
+is slow), `lint` runs `python -m repro.lint --strict` (R1 pins this file
+to the registry), and `bench-gate` replays the benchmark smokes against
+the committed artifacts (`benchmarks/ci_gate.py`).
+"""
+
+
+def generate_markdown() -> str:
+    """The exact content of ``docs/KNOBS.md`` (R1 pins the file to this)."""
+    out = [_HEADER]
+    for key, title, preamble in _SECTIONS:
+        knobs = [k for k in REGISTRY if k.section == key]
+        if not knobs:
+            continue
+        out.append(f"\n## {title}\n")
+        if preamble:
+            out.append("\n" + preamble)
+        if key == "dispatch":
+            out.append("\n| Variable | Values | Forces | Consumed by |\n"
+                       "|---|---|---|---|\n")
+            for k in knobs:
+                out.append(
+                    f"| `{k.name}` | {k.values} | {k.doc} "
+                    f"| {k.consumed_by} |\n"
+                )
+            out.append("\n" + _DISPATCH_FOOTER)
+        else:
+            out.append("\n| Variable | Values | Effect |\n|---|---|---|\n")
+            for k in knobs:
+                out.append(f"| `{k.name}` | {k.values} | {k.doc} |\n")
+            if key == "storage":
+                out.append("\n" + _STORAGE_FOOTER)
+    out.append("\n" + _CI_FOOTER)
+    return "".join(out)

@@ -45,11 +45,12 @@ accounts for both (``nav`` vs total ratio, ``benchmarks/ci_gate.py``).
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Any, NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import knobs as knobs_mod
 
 __all__ = [
     "StorageConfig",
@@ -223,7 +224,7 @@ def default_config() -> StorageConfig:
     is the hook the CI storage legs use to force every build through a
     codec (docs/KNOBS.md).
     """
-    env = os.environ.get("REPRO_STORAGE", "").strip().lower()
+    env = (knobs_mod.get_str("REPRO_STORAGE") or "").strip().lower()
     if env in ("", "f32", "float32"):
         return StorageConfig()
     if env == "compact":
@@ -253,14 +254,16 @@ def resolve_neighbor_dtype(n: int, spec: str = "auto") -> np.dtype:
     For ``spec="split"`` this resolves the dtype of the *wide* (absolute-id)
     layers; the narrow layers are always int8 offsets.
     """
-    fits16 = n - 1 <= np.iinfo(np.int16).max
+    fits16 = (
+        n - 1 <= np.iinfo(np.int16).max  # replint: allow[R5] capacity math
+    )
     if spec == "int32":
         return _NP_DTYPES["int32"]
     if spec == "int16":
         if not fits16:
             raise ValueError(
                 f"neighbor_dtype=int16 cannot hold ids up to {n - 1} "
-                f"(max {np.iinfo(np.int16).max})"
+                f"(max {np.iinfo(np.int16).max})"  # replint: allow[R5] error message cites the dtype ceiling
             )
         return _NP_DTYPES["int16"]
     if spec in ("auto", "split"):

@@ -42,13 +42,13 @@ caller overrides still win.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitset as _bitset
 from repro.core import edge_select as _legacy_edge_select
+from repro.core import knobs as _knobs
 from repro.core import rng as _legacy_rng
 from repro.core import storage as _storage
 from repro.kernels import autotune as _autotune
@@ -74,10 +74,10 @@ def default_impl(kind: str | None = None) -> str:
     force every auto dispatch through one backend.
     """
     if kind:
-        forced = os.environ.get(f"REPRO_{kind.upper()}_IMPL")
+        forced = _knobs.get_str(f"REPRO_{kind.upper()}_IMPL")
         if forced:
             return forced
-    forced = os.environ.get("REPRO_IMPL")
+    forced = _knobs.get_str("REPRO_IMPL")
     if forced:
         return forced
     return "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -258,8 +258,8 @@ def hop(q, table, nbrs, u, L, R, visited, exp_ok, *, logn, m_out,
     f32[B, W*m_out], nvalid bool[B, W*m_out], visited' uint32[B, words]).
     """
     if impl == "auto":
-        forced = os.environ.get("REPRO_HOP_IMPL")
-        glob = os.environ.get("REPRO_IMPL")
+        forced = _knobs.get_str("REPRO_HOP_IMPL")
+        glob = _knobs.get_str("REPRO_IMPL")
         if forced:
             impl = forced
         elif glob == "legacy":

@@ -1,6 +1,14 @@
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.core import knobs as knobs_mod
+
+# must be set before jax initializes its backends; the placeholder-device
+# count comes from the REPRO_DRYRUN_DEVICES knob (core/knobs.py, default
+# 512 — enough for the 2x16x16 multi-pod mesh)
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    f"{knobs_mod.get_int('REPRO_DRYRUN_DEVICES')}"
+)
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

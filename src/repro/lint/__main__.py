@@ -1,0 +1,117 @@
+"""CLI for the repo linter.
+
+    PYTHONPATH=src python -m repro.lint [--strict] [--rules R1,R4] [--json]
+    PYTHONPATH=src python -m repro.lint --write-knobs     # regen docs/KNOBS.md
+    PYTHONPATH=src python -m repro.lint --write-baseline  # refresh baseline
+
+Exit status: 0 when every finding is baselined (``lint_baseline.json``)
+or inline-suppressed; 1 on any new finding. ``--strict`` (the CI mode)
+additionally fails on *stale* baseline entries — a baselined finding
+that no longer fires must be removed, so the baseline only ever shrinks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.lint import (
+    Context, DEFAULT_BASELINE, load_baseline, run, save_baseline,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="replint: repo-specific static analysis (DESIGN.md §10)",
+    )
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale baseline entries (CI mode)")
+    ap.add_argument("--rules", default="",
+                    help="comma list of rule ids to run (default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline path (default: <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: walk up to pyproject.toml)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings "
+                    "(keeps existing reasons, new entries get TODO)")
+    ap.add_argument("--write-knobs", action="store_true",
+                    help="regenerate docs/KNOBS.md from core/knobs.py "
+                    "and exit")
+    args = ap.parse_args(argv)
+
+    ctx = Context(root=args.root)
+
+    if args.write_knobs:
+        from repro.lint.rules.r1_knob_registry import load_knobs_module
+
+        content = load_knobs_module(ctx.knobs_path).generate_markdown()
+        with open(ctx.knobs_md_path, "w", encoding="utf-8") as f:
+            f.write(content)
+        print(f"wrote {ctx.relpath(ctx.knobs_md_path)} "
+              f"({len(content)} chars) from core/knobs.py::REGISTRY")
+        return 0
+
+    rule_ids = (
+        {r.strip().upper() for r in args.rules.split(",") if r.strip()}
+        or None
+    )
+    baseline_path = args.baseline or os.path.join(
+        ctx.root, DEFAULT_BASELINE
+    )
+    baseline = load_baseline(baseline_path)
+    findings = run(ctx, rule_ids)
+
+    if args.write_baseline:
+        entries = {
+            f.key: baseline.get(f.key, "TODO: justify or fix")
+            for f in findings
+        }
+        save_baseline(baseline_path, entries)
+        print(f"wrote {len(entries)} entries to "
+              f"{os.path.relpath(baseline_path, ctx.root)}")
+        return 0
+
+    new = [f for f in findings if f.key not in baseline]
+    old = [f for f in findings if f.key in baseline]
+    # staleness only applies to rules that actually ran this invocation
+    ran_rules = rule_ids or {"R1", "R2", "R3", "R4", "R5", "R6"}
+    stale = sorted(
+        k for k in baseline
+        if k.split(":", 1)[0] in ran_rules
+        and k not in {f.key for f in findings}
+    )
+
+    if args.as_json:
+        print(json.dumps({
+            "new": [vars(f) | {"key": f.key} for f in new],
+            "baselined": [vars(f) | {"key": f.key} for f in old],
+            "stale_baseline": stale,
+            "strict": args.strict,
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        for f in old:
+            print(f.render(tag=f"baselined: {baseline[f.key]}"))
+        for k in stale:
+            print(f"stale baseline entry (no longer fires): {k}")
+        print(
+            f"replint: {len(new)} new, {len(old)} baselined, "
+            f"{len(stale)} stale baseline "
+            f"entr{'y' if len(stale) == 1 else 'ies'}"
+        )
+
+    if new:
+        return 1
+    if args.strict and stale:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,152 @@
+"""Shared AST machinery for the lint rules.
+
+Two jobs:
+
+* small structural helpers (dotted-name rendering, name collection,
+  top-level function lookup) used by every rule, and
+* a *restricted symbolic evaluator* for shape expressions (R4): it
+  evaluates the exact ``pltpu.VMEM(shape, dtype)`` / ``pl.BlockSpec(shape,
+  ...)`` expressions out of a kernel's source against a symbol environment
+  the rule computes from the probe shape and an autotune candidate. The
+  evaluator is deliberately tiny — tuples, ints, names, ``+ - * // %``,
+  ``min``/``max``, attribute and constant-index subscripts. Anything it
+  cannot evaluate becomes a finding rather than a silent pass, which is
+  what keeps R4 honest when a kernel grows a new shape idiom.
+"""
+from __future__ import annotations
+
+import ast
+from types import SimpleNamespace
+
+__all__ = [
+    "EvalError", "dotted", "top_level_functions", "names_in",
+    "str_constants_in", "eval_shape", "eval_module_constant",
+    "SimpleNamespace",
+]
+
+
+class EvalError(Exception):
+    """A shape expression the symbolic evaluator does not understand."""
+
+
+def dotted(node: ast.AST) -> str:
+    """``a.b.c`` for Name/Attribute chains, '' for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def top_level_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    return {
+        n.name: n for n in tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+def names_in(node: ast.AST) -> set[str]:
+    """All Name identifiers loaded anywhere inside ``node``."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def str_constants_in(node: ast.AST) -> list[tuple[str, int]]:
+    """(string literal, line) pairs anywhere inside ``node``."""
+    return [
+        (n.value, n.lineno) for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    ]
+
+
+_BINOPS = {
+    ast.Add: lambda a, b: a + b,
+    ast.Sub: lambda a, b: a - b,
+    ast.Mult: lambda a, b: a * b,
+    ast.FloorDiv: lambda a, b: a // b,
+    ast.Div: lambda a, b: a / b,
+    ast.Mod: lambda a, b: a % b,
+    ast.Pow: lambda a, b: a ** b,
+}
+
+_CALLS = {"min": min, "max": max, "len": len, "int": int}
+
+
+def eval_shape(node: ast.AST, env: dict) -> object:
+    """Evaluate a shape/dtype expression against ``env``.
+
+    ``env`` maps names to ints, tuples, or SimpleNamespace objects
+    (e.g. ``tp -> SimpleNamespace(shape=(n, dp), dtype=4)`` standing in
+    for an array, with dtypes represented by their itemsize in bytes).
+    """
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, (int, float)):
+            return node.value
+        raise EvalError(f"non-numeric constant {node.value!r}")
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(eval_shape(e, env) for e in node.elts)
+    if isinstance(node, ast.Name):
+        if node.id in env:
+            return env[node.id]
+        raise EvalError(f"unknown name {node.id!r}")
+    if isinstance(node, ast.BinOp):
+        fn = _BINOPS.get(type(node.op))
+        if fn is None:
+            raise EvalError(f"operator {type(node.op).__name__}")
+        return fn(eval_shape(node.left, env), eval_shape(node.right, env))
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return -eval_shape(node.operand, env)  # type: ignore[operator]
+    if isinstance(node, ast.Attribute):
+        base = eval_shape(node.value, env)
+        try:
+            return getattr(base, node.attr)
+        except AttributeError as e:
+            raise EvalError(str(e)) from e
+    if isinstance(node, ast.Subscript):
+        base = eval_shape(node.value, env)
+        idx = eval_shape(node.slice, env)
+        try:
+            return base[idx]  # type: ignore[index]
+        except (TypeError, IndexError, KeyError) as e:
+            raise EvalError(str(e)) from e
+    if isinstance(node, ast.Call):
+        fname = dotted(node.func)
+        if fname in _CALLS and not node.keywords:
+            return _CALLS[fname](*[eval_shape(a, env) for a in node.args])
+        raise EvalError(f"call to {fname or '<expr>'}()")
+    if isinstance(node, ast.IfExp):
+        test = eval_shape(node.test, env)
+        return eval_shape(node.body if test else node.orelse, env)
+    if isinstance(node, ast.Compare) and len(node.ops) == 1:
+        a = eval_shape(node.left, env)
+        b = eval_shape(node.comparators[0], env)
+        op = type(node.ops[0])
+        table = {
+            ast.Lt: a < b, ast.LtE: a <= b, ast.Gt: a > b,
+            ast.GtE: a >= b, ast.Eq: a == b, ast.NotEq: a != b,
+        }
+        if op in table:
+            return table[op]
+        raise EvalError(f"comparison {op.__name__}")
+    raise EvalError(f"node {type(node).__name__}")
+
+
+def eval_module_constant(tree: ast.Module, name: str, filename: str):
+    """Evaluate a module-level ``NAME = <expr>`` without importing the
+    module (R4 pulls ``CANDIDATES`` out of ``kernels/autotune.py`` this
+    way — the grid is literals and comprehensions, no imports needed)."""
+    for node in tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == name
+        ):
+            expr = ast.Expression(body=node.value)
+            ast.fix_missing_locations(expr)
+            return eval(  # noqa: S307 - literal/comprehension grid only
+                compile(expr, filename, "eval"), {"__builtins__": {}}, {}
+            )
+    raise EvalError(f"{filename}: no module-level assignment to {name!r}")

@@ -1,0 +1,22 @@
+"""The replint rule set. Each rule module exposes ``RULE_ID``, ``TITLE``,
+``SUMMARY`` and ``check(ctx) -> Iterable[Finding]``; adding a rule =
+adding a module here and listing it in ``ALL_RULES`` (DESIGN.md §10)."""
+from repro.lint.rules import (
+    r1_knob_registry,
+    r2_dispatch_contract,
+    r3_jit_discipline,
+    r4_vmem_budget,
+    r5_sentinel_discipline,
+    r6_reachability,
+)
+
+ALL_RULES = (
+    r1_knob_registry,
+    r2_dispatch_contract,
+    r3_jit_discipline,
+    r4_vmem_budget,
+    r5_sentinel_discipline,
+    r6_reachability,
+)
+
+__all__ = ["ALL_RULES"]

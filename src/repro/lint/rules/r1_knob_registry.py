@@ -1,0 +1,128 @@
+"""R1 knob-registry: every ``REPRO_*`` env access flows through the typed
+registry in ``core/knobs.py``, every ``REPRO_*`` name mentioned in code is
+a registered knob, and ``docs/KNOBS.md`` is exactly what the registry
+generates.
+
+Three findings:
+
+* ``raw-env:<NAME>``       — ``os.environ`` / ``os.getenv`` access with a
+  ``REPRO_*`` key outside ``knobs.py`` (the typed accessors exist so a
+  knob cannot be read without a declared type/default/doc);
+* ``unregistered:<NAME>``  — a ``REPRO_*`` string literal (including in
+  docstrings: stale doc mentions are drift too) that is not in
+  ``REGISTRY``;
+* ``knobs-md-drift``       — ``docs/KNOBS.md`` differs from
+  ``knobs.generate_markdown()`` (regenerate with ``--write-knobs``).
+"""
+from __future__ import annotations
+
+import ast
+import importlib.util
+import os
+import re
+
+from repro.lint import astutil
+
+RULE_ID = "R1"
+TITLE = "knob-registry"
+SUMMARY = "REPRO_* env access must flow through core/knobs.py; KNOBS.md is generated"
+
+_KNOB_RE = re.compile(r"\bREPRO_[A-Z][A-Z0-9_]*\b")
+_ENV_GET = {"os.getenv", "os.environ.get", "environ.get"}
+_ENV_MAP = {"os.environ", "environ"}
+
+
+def load_knobs_module(path: str):
+    """Load ``knobs.py`` standalone (it only needs dataclasses + os), so
+    the linter — and fixture tests pointing at a stub registry — never
+    import the full ``repro.core`` package."""
+    import sys
+
+    name = f"_replint_knobs_{abs(hash(os.path.abspath(path)))}"
+    if name in sys.modules:
+        return sys.modules[name]
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclasses resolves the module through sys.modules at class-creation
+    # time, so the module must be registered before exec
+    sys.modules[name] = mod
+    try:
+        spec.loader.exec_module(mod)
+    except BaseException:
+        del sys.modules[name]
+        raise
+    return mod
+
+
+def check(ctx):
+    knobs_mod = load_knobs_module(ctx.knobs_path)
+    registered = {k.name for k in knobs_mod.REGISTRY}
+
+    knobs_abs = os.path.abspath(ctx.knobs_path)
+    for path in ctx.py_files(ctx.src_dir, *ctx.extra_dirs):
+        if os.path.abspath(path) == knobs_abs:
+            continue
+        tree = ctx.tree(path)
+        seen_raw, seen_unreg = set(), set()
+        for node in ast.walk(tree):
+            key = None
+            if (
+                isinstance(node, ast.Call)
+                and astutil.dotted(node.func) in _ENV_GET
+                and node.args
+            ):
+                key = node.args[0]
+            elif (
+                isinstance(node, ast.Subscript)
+                and isinstance(node.ctx, ast.Load)
+                and astutil.dotted(node.value) in _ENV_MAP
+            ):
+                key = node.slice
+            if (
+                key is not None
+                and isinstance(key, ast.Constant)
+                and isinstance(key.value, str)
+                and _KNOB_RE.fullmatch(key.value)
+                and key.value not in seen_raw
+            ):
+                seen_raw.add(key.value)
+                yield ctx.finding(
+                    RULE_ID, path, node,
+                    f"raw environment read of {key.value!r}: use the typed "
+                    f"accessors in repro.core.knobs (get_str/get_int/...) "
+                    f"so the knob has a registered type, default and doc",
+                    f"raw-env:{key.value}",
+                )
+        for text, line in astutil.str_constants_in(tree):
+            for name in _KNOB_RE.findall(text):
+                if name in registered or name in seen_unreg:
+                    continue
+                seen_unreg.add(name)
+                yield ctx.finding(
+                    RULE_ID, path, line,
+                    f"{name} is not a registered knob: declare it in "
+                    f"repro.core.knobs.REGISTRY (or fix the stale mention) "
+                    f"and regenerate docs/KNOBS.md",
+                    f"unregistered:{name}",
+                )
+
+    # docs/KNOBS.md must be exactly the generated table
+    want = knobs_mod.generate_markdown()
+    if not os.path.exists(ctx.knobs_md_path):
+        yield ctx.finding(
+            RULE_ID, ctx.knobs_md_path, 0,
+            "docs/KNOBS.md is missing: run "
+            "`PYTHONPATH=src python -m repro.lint --write-knobs`",
+            "knobs-md-drift",
+        )
+    else:
+        with open(ctx.knobs_md_path, encoding="utf-8") as f:
+            have = f.read()
+        if have != want:
+            yield ctx.finding(
+                RULE_ID, ctx.knobs_md_path, 0,
+                "docs/KNOBS.md drifted from knobs.generate_markdown(): "
+                "edit src/repro/core/knobs.py (the source of truth) and "
+                "run `PYTHONPATH=src python -m repro.lint --write-knobs`",
+                "knobs-md-drift",
+            )

@@ -1,0 +1,225 @@
+"""R2 dispatch-contract: every op registered in ``kernels/ops.py`` keeps
+the full contract that makes the backend matrix trustworthy:
+
+* ``_check_impl`` validation — unknown backend tokens raise instead of
+  silently running the Pallas interpreter on CPU;
+* a ``ref.py`` contract — the op (directly, or through a one-level
+  module helper like ``_prune_xla``) references a ``_ref.<fn>`` that
+  actually exists in ``kernels/ref.py``;
+* an oracle impl token — the allowed-token set contains at least one
+  non-``pallas`` backend, so CI can always diff the kernel against a
+  reference implementation;
+* a registered override knob — the op consults ``REPRO_<KIND>_IMPL``
+  (via ``default_impl("<kind>")`` or directly) and that knob is in the
+  ``core/knobs.py`` registry;
+* a test module naming the op under ``tests/``.
+
+The op roster is ``ops.__all__`` minus ``default_impl`` — exporting an op
+without the contract is exactly the drift this rule exists to catch.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.lint import astutil
+from repro.lint.rules.r1_knob_registry import load_knobs_module
+
+RULE_ID = "R2"
+TITLE = "dispatch-contract"
+SUMMARY = "every kernels/ops.py op has ref contract, oracle token, _check_impl, knob, test"
+
+_KNOB_RE = re.compile(r"\bREPRO_[A-Z][A-Z0-9_]*_IMPL\b")
+_NON_OPS = {"default_impl"}
+
+
+def _ref_aliases(tree: ast.Module) -> set[str]:
+    out = set()
+    for node in tree.body:
+        if isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.name == "ref" or a.name.endswith(".ref"):
+                    out.add(a.asname or a.name.split(".")[-1])
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.endswith(".ref") and a.asname:
+                    out.add(a.asname)
+    return out
+
+
+def _module_helpers(tree: ast.Module) -> dict[str, ast.AST]:
+    """Top-level name -> defining node, for the one-level closure (prune
+    reaches _ref.prune through the module-level ``_prune_xla`` assign)."""
+    out: dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node
+    return out
+
+
+def _ref_attrs(node: ast.AST, aliases: set[str]) -> set[str]:
+    return {
+        n.attr for n in ast.walk(node)
+        if isinstance(n, ast.Attribute)
+        and isinstance(n.value, ast.Name)
+        and n.value.id in aliases
+    }
+
+
+def _allowed_tokens(call: ast.Call, helpers: dict[str, ast.AST]):
+    """The ``allowed`` argument of a ``_check_impl`` call as a set of
+    string tokens, or None when it isn't statically readable."""
+    if len(call.args) < 3:
+        return None
+    node = call.args[2]
+    if isinstance(node, ast.Name) and node.id in helpers:
+        helper = helpers[node.id]
+        if isinstance(helper, ast.Assign):
+            node = helper.value
+    if isinstance(node, (ast.Set, ast.Tuple, ast.List)):
+        vals = set()
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            vals.add(e.value)
+        return vals
+    return None
+
+
+def check(ctx):
+    tree = ctx.tree(ctx.ops_path)
+    funcs = astutil.top_level_functions(tree)
+    helpers = _module_helpers(tree)
+    aliases = _ref_aliases(tree)
+    ref_funcs = set(astutil.top_level_functions(ctx.tree(ctx.ref_path)))
+
+    try:
+        exported = astutil.eval_module_constant(
+            tree, "__all__", ctx.ops_path
+        )
+    except astutil.EvalError:
+        yield ctx.finding(
+            RULE_ID, ctx.ops_path, 0,
+            "ops.py has no statically readable __all__ — the op roster "
+            "R2 checks is __all__ minus default_impl",
+            "no-all",
+        )
+        return
+
+    test_texts = {
+        p: ctx.source(p) for p in ctx.py_files(ctx.tests_dir)
+    }
+    registered = {
+        k.name for k in load_knobs_module(ctx.knobs_path).REGISTRY
+    }
+
+    for op in exported:
+        if op in _NON_OPS:
+            continue
+        fn = funcs.get(op)
+        if fn is None:
+            yield ctx.finding(
+                RULE_ID, ctx.ops_path, 0,
+                f"__all__ exports {op!r} but ops.py has no top-level "
+                f"function of that name",
+                f"{op}:missing-def",
+            )
+            continue
+
+        # reachable nodes: the op body plus one level of module helpers
+        reach = [fn]
+        reach += [
+            helpers[n] for n in astutil.names_in(fn)
+            if n in helpers and helpers[n] is not fn
+        ]
+
+        # _check_impl validation + oracle token
+        checks = [
+            n for node in reach for n in ast.walk(node)
+            if isinstance(n, ast.Call)
+            and astutil.dotted(n.func) == "_check_impl"
+        ]
+        if not checks:
+            yield ctx.finding(
+                RULE_ID, ctx.ops_path, fn,
+                f"{op} never calls _check_impl: unknown backend tokens "
+                f"(e.g. a typo'd REPRO_IMPL) would fall through silently",
+                f"{op}:no-check-impl",
+            )
+        else:
+            tokens = _allowed_tokens(checks[0], helpers)
+            if tokens is not None and not (tokens - {"pallas"}):
+                yield ctx.finding(
+                    RULE_ID, ctx.ops_path, checks[0],
+                    f"{op} allows only the pallas backend: every op needs "
+                    f"a non-pallas oracle impl token so CI can diff the "
+                    f"kernel against a reference",
+                    f"{op}:no-oracle",
+                )
+
+        # ref.py contract
+        attrs = set()
+        for node in reach:
+            attrs |= _ref_attrs(node, aliases)
+        if not attrs:
+            yield ctx.finding(
+                RULE_ID, ctx.ops_path, fn,
+                f"{op} never references a kernels/ref.py contract "
+                f"(directly or via a module-level helper): the oracle "
+                f"branch is the op's executable spec",
+                f"{op}:no-ref-contract",
+            )
+        for attr in sorted(attrs):
+            if attr not in ref_funcs:
+                yield ctx.finding(
+                    RULE_ID, ctx.ops_path, fn,
+                    f"{op} references _ref.{attr} but kernels/ref.py "
+                    f"defines no function {attr!r}",
+                    f"{op}:ref-missing:{attr}",
+                )
+
+        # registered override knob
+        knob_names = set()
+        for node in reach:
+            for n in ast.walk(node):
+                if (
+                    isinstance(n, ast.Call)
+                    and astutil.dotted(n.func) == "default_impl"
+                    and n.args
+                    and isinstance(n.args[0], ast.Constant)
+                    and isinstance(n.args[0].value, str)
+                ):
+                    knob_names.add(f"REPRO_{n.args[0].value.upper()}_IMPL")
+            for text, _line in astutil.str_constants_in(node):
+                knob_names |= set(_KNOB_RE.findall(text))
+        if not knob_names:
+            yield ctx.finding(
+                RULE_ID, ctx.ops_path, fn,
+                f"{op} has no env override knob: dispatch must consult "
+                f"REPRO_<KIND>_IMPL (via default_impl('<kind>')) so the "
+                f"CI backend matrix can force its backend",
+                f"{op}:no-knob",
+            )
+        for name in sorted(knob_names):
+            if name not in registered:
+                yield ctx.finding(
+                    RULE_ID, ctx.ops_path, fn,
+                    f"{op} consults {name} which is not in the "
+                    f"core/knobs.py registry",
+                    f"{op}:unregistered-knob:{name}",
+                )
+
+        # a test module naming the op
+        pat = re.compile(rf"\b{re.escape(op)}\b")
+        if not any(pat.search(t) for t in test_texts.values()):
+            yield ctx.finding(
+                RULE_ID, ctx.ops_path, fn,
+                f"no module under tests/ names {op}: every dispatched op "
+                f"needs at least one test exercising it by name",
+                f"{op}:no-test",
+            )

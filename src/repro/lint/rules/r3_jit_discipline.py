@@ -1,0 +1,208 @@
+"""R3 jit-discipline: the jitted cores (``_search_improvised_jit`` and
+friends) must stay retrace-free and tracer-safe.
+
+Inside any function that is jit-compiled (``@jax.jit``,
+``@functools.partial(jax.jit, static_argnames=...)``, or the assignment
+form ``f = jax.jit(g, ...)`` / ``functools.partial(jax.jit, ...)(g)``):
+
+* ``float()`` / ``int()`` / ``bool()`` on an expression rooted at a
+  *traced* parameter is a concretization error at trace time (shapes are
+  fine: expressions routed through ``.shape`` / ``.ndim`` / ``.size`` /
+  ``.dtype`` / ``len()`` are allowed);
+* ``.item()`` anywhere is the same error;
+* ``np.asarray`` / ``np.array`` on a traced root forces a host transfer;
+* every ``static_argnames`` entry must name a parameter of the function;
+* a static parameter must not default to a mutable (unhashable) literal —
+  static args are dict keys in jax's compilation cache.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint import astutil
+
+RULE_ID = "R3"
+TITLE = "jit-discipline"
+SUMMARY = "no tracer coercions or unhashable static args inside jitted cores"
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+_COERCE = {"float", "int", "bool"}
+_NP_BASES = {"np", "numpy", "onp"}
+_NP_FUNCS = {"asarray", "array", "ascontiguousarray"}
+
+
+def _static_names(keywords) -> set[str] | None:
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {
+                    e.value for e in v.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)
+                }
+    return None
+
+
+def _jit_statics(expr: ast.AST) -> set[str] | None:
+    """If ``expr`` is a jit-wrapping expression, its static_argnames set
+    (possibly empty); None when it isn't a jit wrapper."""
+    if astutil.dotted(expr) in _JIT_NAMES:
+        return set()
+    if isinstance(expr, ast.Call):
+        f = astutil.dotted(expr.func)
+        if f in _JIT_NAMES:
+            return _static_names(expr.keywords) or set()
+        if f in _PARTIAL_NAMES and expr.args:
+            if astutil.dotted(expr.args[0]) in _JIT_NAMES:
+                return _static_names(expr.keywords) or set()
+    return None
+
+
+def _param_names(fn) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+
+
+def _mutable_default(fn, name: str):
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    defaults = a.defaults
+    for p, d in zip(pos[len(pos) - len(defaults):], defaults):
+        if p.arg == name:
+            return d if isinstance(d, (ast.List, ast.Dict, ast.Set)) else None
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if p.arg == name and d is not None:
+            return d if isinstance(d, (ast.List, ast.Dict, ast.Set)) else None
+    return None
+
+
+def _jit_cores(tree: ast.Module):
+    """Yield ``(fn_node, static_names)`` for every jit-compiled function:
+    decorator form anywhere, plus module-level assignment form wrapping a
+    local function by name."""
+    funcs = astutil.top_level_functions(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                statics = _jit_statics(dec)
+                if statics is not None:
+                    yield node, statics
+                    break
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        # jax.jit(fn, static_argnames=...) form
+        statics = None
+        target = None
+        if astutil.dotted(call.func) in _JIT_NAMES and call.args:
+            statics = _static_names(call.keywords) or set()
+            target = call.args[0]
+        else:
+            # functools.partial(jax.jit, ...)(fn) form
+            inner = call.func
+            if isinstance(inner, ast.Call):
+                s = _jit_statics(inner)
+                if s is not None and call.args:
+                    statics, target = s, call.args[0]
+        if statics is None or target is None:
+            continue
+        if isinstance(target, ast.Name) and target.id in funcs:
+            yield funcs[target.id], statics
+        # attribute targets (e.g. _ref.prune) live in another module and
+        # are checked when that module is scanned — nothing to do here
+
+
+def _shape_routed(expr: ast.AST) -> bool:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Attribute) and n.attr in _SHAPE_ATTRS:
+            return True
+        if isinstance(n, ast.Call) and astutil.dotted(n.func) == "len":
+            return True
+    return False
+
+
+def check(ctx):
+    for path in ctx.py_files(ctx.src_dir):
+        tree = ctx.tree(path)
+        seen_fns = set()
+        for fn, statics in _jit_cores(tree):
+            if id(fn) in seen_fns:
+                continue
+            seen_fns.add(id(fn))
+            params = _param_names(fn)
+            traced = set(params) - statics
+
+            for s in sorted(statics):
+                if s not in params:
+                    yield ctx.finding(
+                        RULE_ID, path, fn,
+                        f"{fn.name}: static_argnames entry {s!r} is not a "
+                        f"parameter of the jitted function",
+                        f"{fn.name}:static-unknown:{s}",
+                    )
+                    continue
+                bad = _mutable_default(fn, s)
+                if bad is not None:
+                    yield ctx.finding(
+                        RULE_ID, path, bad,
+                        f"{fn.name}: static arg {s!r} defaults to a mutable "
+                        f"{type(bad).__name__.lower()} literal — static args "
+                        f"must be hashable (use a tuple / frozen config)",
+                        f"{fn.name}:static-mutable:{s}",
+                    )
+
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = astutil.dotted(node.func)
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                    and not node.args
+                ):
+                    yield ctx.finding(
+                        RULE_ID, path, node,
+                        f"{fn.name}: .item() inside a jitted core "
+                        f"concretizes a tracer at trace time",
+                        f"{fn.name}:item:{node.lineno}",
+                    )
+                    continue
+                if f in _COERCE and len(node.args) == 1:
+                    arg = node.args[0]
+                    if not _shape_routed(arg) and (
+                        astutil.names_in(arg) & traced
+                    ):
+                        yield ctx.finding(
+                            RULE_ID, path, node,
+                            f"{fn.name}: {f}() on an expression rooted at "
+                            f"traced parameter(s) "
+                            f"{sorted(astutil.names_in(arg) & traced)} — "
+                            f"this concretizes a tracer (route through "
+                            f".shape/.ndim, or make the arg static)",
+                            f"{fn.name}:coerce-{f}:{node.lineno}",
+                        )
+                    continue
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in _NP_BASES
+                    and node.func.attr in _NP_FUNCS
+                ):
+                    roots = set()
+                    for a in node.args:
+                        if not _shape_routed(a):
+                            roots |= astutil.names_in(a) & traced
+                    if roots:
+                        yield ctx.finding(
+                            RULE_ID, path, node,
+                            f"{fn.name}: np.{node.func.attr}() on traced "
+                            f"parameter(s) {sorted(roots)} forces a host "
+                            f"transfer inside the jitted core",
+                            f"{fn.name}:np-{node.func.attr}:{node.lineno}",
+                        )

@@ -1,0 +1,92 @@
+"""R5 sentinel-discipline: storage and kernel code uses exactly one
+invalid-id sentinel — ``-1`` — across every neighbor-table dtype
+(int16/int32/split-offset), every kernel and every backend. Two things
+violate that:
+
+* ``iinfo(...).max`` — a dtype-max sentinel comparison. ``32767`` means
+  "invalid" in an int16 table but is a perfectly valid id once the table
+  widens; the auto-narrowing storage codecs make this a real, silent
+  corruption path. (``iinfo(...).min`` is *not* flagged: the kernels'
+  argmin priority masking legitimately uses the int32 minimum, and it is
+  not a stored id.) Capacity arithmetic that genuinely needs the dtype
+  ceiling carries an inline ``# replint: allow[R5]`` with its reason.
+* a magic integer equal to a dtype extreme (``32767``, ``65535``,
+  ``2147483647``, ``4294967295``) used in a comparison or in a
+  fill/where-style call — the same sentinel spelled as a literal.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint import astutil
+
+RULE_ID = "R5"
+TITLE = "sentinel-discipline"
+SUMMARY = "only -1 sentinels in storage/kernel code; no dtype-max comparisons"
+
+_MAGIC = {32767, 65535, 2147483647, 4294967295}
+_FILL_CALLS = {"where", "full", "full_like", "select"}
+
+
+def _is_iinfo_max(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Attribute)
+        and node.attr == "max"
+        and isinstance(node.value, ast.Call)
+        and astutil.dotted(node.value.func).split(".")[-1] == "iinfo"
+    )
+
+
+def _magic_value(node: ast.AST):
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value if node.value in _MAGIC else None
+    return None
+
+
+def check(ctx):
+    for path in ctx.sentinel_paths:
+        try:
+            tree = ctx.tree(path)
+        except FileNotFoundError:
+            continue
+        counts: dict[str, int] = {}
+
+        def slug(base: str) -> str:
+            counts[base] = counts.get(base, 0) + 1
+            n = counts[base]
+            return base if n == 1 else f"{base}:{n}"
+
+        for node in ast.walk(tree):
+            if _is_iinfo_max(node):
+                yield ctx.finding(
+                    RULE_ID, path, node,
+                    "iinfo(...).max used as/near a sentinel: the only "
+                    "invalid-id sentinel is -1 (dtype-max is a valid id "
+                    "once the neighbor table widens). Capacity checks "
+                    "that truly need the dtype ceiling take an inline "
+                    "`# replint: allow[R5] <reason>`",
+                    slug("iinfo-max"),
+                )
+            elif isinstance(node, ast.Compare):
+                for operand in [node.left, *node.comparators]:
+                    v = _magic_value(operand)
+                    if v is not None:
+                        yield ctx.finding(
+                            RULE_ID, path, node,
+                            f"comparison against magic dtype extreme {v}: "
+                            f"use the -1 sentinel (or an explicit named "
+                            f"constant with an R5 allow)",
+                            slug(f"magic:{v}"),
+                        )
+            elif isinstance(node, ast.Call):
+                fname = astutil.dotted(node.func).split(".")[-1]
+                if fname in _FILL_CALLS:
+                    for a in node.args:
+                        v = _magic_value(a)
+                        if v is not None:
+                            yield ctx.finding(
+                                RULE_ID, path, node,
+                                f"{fname}() filled with magic dtype "
+                                f"extreme {v}: the one sentinel is -1",
+                                slug(f"magic-fill:{v}"),
+                            )

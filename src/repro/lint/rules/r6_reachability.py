@@ -1,0 +1,127 @@
+"""R6 import-reachability: every module under ``src/repro`` must be
+reachable, through the static import graph, from the public entry points
+(``Context.entry_points`` — the index/search API, the serving stack, the
+workload drivers, the linter). Code nothing imports is code no test
+runs and no reader can trust.
+
+The repo grew from a generic training-harness seed, and several seed
+packages (``models/``, ``train/``, ``configs/``, ``data/``,
+``sharding/``, ``checkpoint/``, ``runtime/``, the ``launch/`` drivers
+over them) survive only as the multi-pod dry-run's scaffolding. Those
+are *fenced, not deleted*: each lives in ``lint_baseline.json`` with a
+one-line reason, so the fence is explicit, the list can only shrink
+(``benchmarks/ci_gate.py`` fails growth), and any NEW unreachable
+module is a hard finding.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+RULE_ID = "R6"
+TITLE = "import-reachability"
+SUMMARY = "no module unreachable from the public entry points (seed fence baselined)"
+
+
+def _module_map(ctx) -> dict[str, str]:
+    """module name -> file path for everything under ``ctx.src_dir``."""
+    base = os.path.basename(os.path.abspath(ctx.src_dir))
+    out = {}
+    for path in ctx.py_files(ctx.src_dir):
+        rel = os.path.relpath(path, ctx.src_dir)
+        parts = rel.replace(os.sep, "/").split("/")
+        if parts[-1] == "__init__.py":
+            parts = parts[:-1]
+        else:
+            parts[-1] = parts[-1][:-3]
+        out[".".join([base, *parts]) if parts else base] = path
+    return out
+
+
+def _imports(ctx, path: str, modname: str, known) -> set[str]:
+    base = modname.split(".")[0]
+    is_pkg = os.path.basename(path) == "__init__.py"
+    out = set()
+
+    def add(name: str):
+        # an import of repro.a.b marks repro, repro.a and repro.a.b reachable
+        parts = name.split(".")
+        for i in range(1, len(parts) + 1):
+            cand = ".".join(parts[:i])
+            if cand in known:
+                out.add(cand)
+
+    for node in ast.walk(ctx.tree(path)):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == base or a.name.startswith(base + "."):
+                    add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                # relative: for module a.b.c level 1 anchors at a.b; for a
+                # package __init__ (modname a.b) level 1 anchors at a.b
+                parts = modname.split(".")
+                drop = node.level - (1 if is_pkg else 0)
+                anchor = parts[: len(parts) - drop] if drop else parts
+                target = ".".join(
+                    anchor + ([node.module] if node.module else [])
+                )
+            else:
+                target = node.module or ""
+            if target == base or target.startswith(base + "."):
+                add(target)
+                for a in node.names:
+                    add(f"{target}.{a.name}")
+    return out
+
+
+def check(ctx):
+    modules = _module_map(ctx)
+    known = set(modules)
+
+    graph = {}
+    for name, path in modules.items():
+        try:
+            graph[name] = _imports(ctx, path, name, modules)
+        except SyntaxError as e:
+            yield ctx.finding(
+                RULE_ID, path, 0, f"cannot parse: {e}", f"parse:{name}"
+            )
+            graph[name] = set()
+
+    roots = []
+    for entry in ctx.entry_points:
+        if entry in known:
+            roots.append(entry)
+        else:
+            yield ctx.finding(
+                RULE_ID, ctx.src_dir, 0,
+                f"entry point {entry!r} names no module under src — "
+                f"update Context.entry_points",
+                f"missing-entry:{entry}",
+            )
+
+    reachable = set(roots)
+    # an entry point's enclosing packages are implicitly importable
+    for r in roots:
+        parts = r.split(".")
+        reachable.update(
+            ".".join(parts[:i]) for i in range(1, len(parts))
+            if ".".join(parts[:i]) in known
+        )
+    frontier = list(reachable)
+    while frontier:
+        cur = frontier.pop()
+        for nxt in graph.get(cur, ()):
+            if nxt not in reachable:
+                reachable.add(nxt)
+                frontier.append(nxt)
+
+    for name in sorted(known - reachable):
+        yield ctx.finding(
+            RULE_ID, modules[name], 0,
+            f"{name} is unreachable from every public entry point "
+            f"({', '.join(ctx.entry_points)}): delete it, wire it in, or "
+            f"fence it in lint_baseline.json with a reason",
+            name,
+        )

@@ -28,12 +28,11 @@ its full grid (the CI executor-warmup leg's hook).
 """
 from __future__ import annotations
 
-import os
-
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import config as config_mod
+from repro.core import knobs as knobs_mod
 from repro.core import search as search_mod
 from repro.core import storage as storage_mod
 from repro.core.config import SearchConfig
@@ -99,7 +98,7 @@ class SearchExecutor:
             "batches": 0, "queries": 0, "index_bytes": int(index.nbytes),
         }
         if warmup is None:
-            warmup = bool(os.environ.get("REPRO_SERVE_WARMUP"))
+            warmup = knobs_mod.get_bool("REPRO_SERVE_WARMUP")
         if warmup:
             self.warmup()
 

@@ -36,11 +36,11 @@ deterministic unit tests stay deterministic under the chaos leg. Knobs:
 from __future__ import annotations
 
 import dataclasses
-import os
 import random
 import threading
 import time
 
+from repro.core import knobs as knobs_mod
 from repro.serve.errors import InjectedFaultError
 
 __all__ = ["FAULT_KINDS", "FaultConfig", "FaultInjector", "resolve"]
@@ -75,25 +75,23 @@ class FaultConfig:
 
     @classmethod
     def from_env(cls, env=None) -> "FaultConfig | None":
-        """``REPRO_FAULTS`` comma list -> a config, or None when unset."""
-        env = os.environ if env is None else env
-        raw = env.get("REPRO_FAULTS", "").strip()
-        if not raw:
-            return None
-        kinds = tuple(k.strip() for k in raw.split(",") if k.strip())
+        """``REPRO_FAULTS`` comma list -> a config, or None when unset.
+
+        All knobs resolve through the typed registry (``core/knobs.py``);
+        ``env`` overrides the mapping they read from (tests).
+        """
+        kinds = knobs_mod.get_list("REPRO_FAULTS", env)
         if not kinds:
             return None
-
-        def _f(key, default):
-            return float(env.get(key, default))
-
         return cls(
             kinds=kinds,
-            latency_s=_f("REPRO_FAULT_LATENCY_S", 0.02),
-            latency_rate=_f("REPRO_FAULT_LATENCY_RATE", 0.25),
-            flush_error_rate=_f("REPRO_FAULT_FLUSH_ERROR_RATE", 0.25),
-            queue_full_rate=_f("REPRO_FAULT_QUEUE_FULL_RATE", 0.25),
-            seed=int(env.get("REPRO_FAULT_SEED", 0)),
+            latency_s=knobs_mod.get_float("REPRO_FAULT_LATENCY_S", env),
+            latency_rate=knobs_mod.get_float("REPRO_FAULT_LATENCY_RATE", env),
+            flush_error_rate=knobs_mod.get_float(
+                "REPRO_FAULT_FLUSH_ERROR_RATE", env),
+            queue_full_rate=knobs_mod.get_float(
+                "REPRO_FAULT_QUEUE_FULL_RATE", env),
+            seed=knobs_mod.get_int("REPRO_FAULT_SEED", env),
         )
 
 
